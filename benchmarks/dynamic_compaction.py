@@ -1,0 +1,123 @@
+"""Paper Figure 5(c): workload-aware dynamic compaction on/off.
+
+Two levels of evidence:
+
+1. serving-level (the paper's view): staged workload through the full
+   engine.  At container scale the TTFT delta is within noise (the paper
+   itself notes write throughput is bounded by inference latency) — we
+   report it plus the controller's tuning decisions.
+2. store-level: high-volume alternating write/read phases directly against
+   the LSM (where compaction work actually dominates) — measures real I/O
+   seconds, write amplification and compaction counts, dynamic vs static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.codec import CODEC_RAW, BatchCodec
+from repro.core.store import KVBlockStore
+
+from . import common
+
+
+def store_phase_bench(adaptive: bool, ops_per_phase: int = 4000, seed: int = 0):
+    """Alternating write-heavy / read-heavy phases straight at the store."""
+    root = tempfile.mkdtemp(prefix=f"dynstore_{adaptive}_")
+    store = KVBlockStore(
+        os.path.join(root, "s"),
+        block_size=16,
+        codec=BatchCodec(CODEC_RAW, use_zlib=False),
+        buffer_bytes=64 * 1024,
+        adaptive=adaptive,
+        controller_window=2048,
+    )
+    store.controller.min_ops_between_tunings = 512
+    rng = np.random.default_rng(seed)
+    payload = rng.standard_normal((16, 32)).astype(np.float16)  # small: index-dominant
+    known = []
+    t_phase = []
+    phases = ("w", "r", "w", "r", "w", "r")
+    for ph in phases:
+        t0 = time.perf_counter()
+        if ph == "w":
+            for _ in range(ops_per_phase // 8):
+                toks = rng.integers(0, 1 << 30, size=8 * 16).tolist()
+                store.put_batch(toks, [payload] * 8)
+                known.append(toks)
+            store.maintenance(compact_steps=64)
+        else:
+            for _ in range(ops_per_phase):
+                toks = known[int(rng.integers(0, len(known)))]
+                n = store.probe(toks)
+                if n:
+                    store.get_batch(toks, min(n, 4 * 16))
+        t_phase.append(time.perf_counter() - t0)
+    out = {
+        "phase_s": [round(t, 3) for t in t_phase],
+        "total_s": round(sum(t_phase), 3),
+        "write_phase_s": round(sum(t_phase[0::2]), 3),
+        "read_phase_s": round(sum(t_phase[1::2]), 3),
+        "compactions": store.index.stats.compactions,
+        "bytes_compacted": getattr(store.index.stats, "bytes_compacted", None),
+        "level_params": store.index.level_params(),
+        "retunes": len(store.controller.history),
+        "tunings": [{"T": e.T, "K": e.K, "mix": {k: round(v, 2) for k, v in e.mix.items()}}
+                    for e in store.controller.history],
+    }
+    store.close()
+    return out
+
+
+def run(scale: common.BenchScale = None, verbose=True, reps: int = 2):
+    s = scale or common.BenchScale()
+    out = {}
+    # alternate run order across reps to cancel disk-cache ordering noise
+    for adaptive in (True, False):
+        key = "dynamic" if adaptive else "static"
+        ttfts, ios, hits, stages, ctl = [], [], [], None, None
+        for rep in range(reps):
+            root = common.fresh_dir(tempfile.mkdtemp(prefix=f"dyn_{adaptive}_{rep}_"))
+            eng = common.make_engine(root, "lsm", s, adaptive=adaptive)
+            stages = common.run_staged(eng, s, seed=rep)
+            ctl = eng.h.store.controller
+            ttfts.append(float(np.mean([st.mean_ttft_s for st in stages])))
+            ios.append(float(np.mean([st.mean_io_s for st in stages])))
+            hits.append(float(np.mean([st.hit_rate for st in stages])))
+        out[key] = {
+            "ttft_s": float(np.mean(ttfts)),
+            "io_s": float(np.mean(ios)),
+            "hit_rate": float(np.mean(hits)),
+            "retunes": len(ctl.history),
+            "tunings": [
+                {"mix": ev.mix, "T": ev.T, "K": ev.K} for ev in ctl.history
+            ],
+            "per_stage": [st.__dict__ for st in stages],
+        }
+    # store-level phase benchmark (both orders to cancel cache effects)
+    out["store_level"] = {
+        "dynamic": store_phase_bench(True),
+        "static": store_phase_bench(False),
+    }
+    if verbose:
+        d, st = out["dynamic"], out["static"]
+        print(f"serving: dynamic TTFT {d['ttft_s']:.4f}s vs static {st['ttft_s']:.4f}s "
+              f"(retunes={d['retunes']})")
+        sd, ss = out["store_level"]["dynamic"], out["store_level"]["static"]
+        print(f"store:   dynamic {sd['total_s']:.2f}s (w {sd['write_phase_s']:.2f} r {sd['read_phase_s']:.2f}, "
+              f"compactions {sd['compactions']}, tunings {sd['tunings']})")
+        print(f"         static  {ss['total_s']:.2f}s (w {ss['write_phase_s']:.2f} r {ss['read_phase_s']:.2f}, "
+              f"compactions {ss['compactions']})")
+        if ss["total_s"] > 0:
+            print(f"store-level delta: {100*(sd['total_s']/ss['total_s']-1):+.1f}%")
+    common.save_artifact("dynamic_compaction", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

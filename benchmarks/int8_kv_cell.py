@@ -1,0 +1,138 @@
+"""§Perf iteration A4 (prototype): int8 KV cache for decode — the paper's
+batch codec applied on-device.
+
+Lowers two variants of the qwen2.5-32b-shaped decode attention tower on
+the production mesh and compares roofline memory terms:
+
+  bf16:  cache (L,B,S,KVH,Dh) bf16, chunked online-softmax readout
+  int8:  cache int8 + per-(token,head) f32 scales; dequant fused into the
+         per-chunk einsum (scales are 1/256 of the payload)
+
+Run standalone (sets 512 host devices before importing jax):
+
+    PYTHONPATH=src python -m benchmarks.int8_kv_cell
+"""
+
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import functools
+import json
+
+
+def build_and_measure():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.hlocost import analyze_text
+    from repro.launch.mesh import HBM_BW, make_production_mesh
+
+    # qwen2.5-32b decode_32k attention dims
+    L, B, S, KVH, Dh, H = 64, 128, 32768, 8, 128, 40
+    G = H // KVH
+    CHUNK = 1024
+    F32 = jnp.float32
+
+    def readout(q, kc, vc, kv_len, scales=None):
+        """One layer's chunked attention readout; kc/vc (B,S,KVH,Dh) in
+        storage dtype; scales (B,S,KVH) f32 when int8."""
+        n_chunks = S // CHUNK
+        kcc = kc.reshape(B, n_chunks, CHUNK, KVH, Dh).transpose(1, 0, 2, 3, 4)
+        vcc = vc.reshape(B, n_chunks, CHUNK, KVH, Dh).transpose(1, 0, 2, 3, 4)
+        sc = (
+            scales.reshape(B, n_chunks, CHUNK, KVH).transpose(1, 0, 2, 3)
+            if scales is not None
+            else None
+        )
+        qg = q.reshape(B, 1, KVH, G, Dh)
+
+        def step(carry, xs):
+            m, l, acc, ci = carry
+            if sc is None:
+                kb, vb = xs
+                kb = kb.astype(jnp.bfloat16)
+                vb = vb.astype(jnp.bfloat16)
+            else:
+                kb, vb, sb = xs  # int8 + scales: dequant fused per chunk
+                kb = (kb.astype(F32) * sb[..., None]).astype(jnp.bfloat16)
+                vb = (vb.astype(F32) * sb[..., None]).astype(jnp.bfloat16)
+            s = jnp.einsum("bskgd,btkd->bkgst", qg, kb, preferred_element_type=F32)
+            s = s * (Dh**-0.5)
+            pos = ci * CHUNK + jnp.arange(CHUNK)
+            s = jnp.where((pos[None, :] < kv_len[:, None])[:, None, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(jnp.bfloat16), vb, preferred_element_type=F32
+            )
+            return (m_new, l_new, acc_new, ci + 1), None
+
+        m0 = jnp.full((B, KVH, G, 1), -jnp.inf, F32)
+        l0 = jnp.zeros((B, KVH, G, 1), F32)
+        a0 = jnp.zeros((B, KVH, G, 1, Dh), F32)
+        xs = (kcc, vcc) if sc is None else (kcc, vcc, sc)
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), xs)
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, H, Dh)
+
+    def tower(q, k_all, v_all, kv_len, s_all=None):
+        def body(out, xs):
+            if s_all is None:
+                kc, vc = xs
+                return out + readout(q, kc, vc, kv_len), None
+            kc, vc, sc = xs
+            return out + readout(q, kc, vc, kv_len, sc), None
+
+        out0 = jnp.zeros((B, H, Dh), F32)
+        xs = (k_all, v_all) if s_all is None else (k_all, v_all, s_all)
+        out, _ = jax.lax.scan(body, out0, xs)
+        return out
+
+    mesh = make_production_mesh(multi_pod=False)
+    chips = mesh.devices.size
+    batch_sh = NamedSharding(mesh, P(("pod", "data") if "pod" in mesh.axis_names else "data"))
+    cache_sh = NamedSharding(mesh, P(None, "data", None, None, "model"))  # Dh-sharded
+    scale_sh = NamedSharding(mesh, P(None, "data", None, None))
+    q_sh = NamedSharding(mesh, P("data", None, "model"))  # H=40 doesn't divide 16; shard Dh
+
+    q = jax.ShapeDtypeStruct((B, H, Dh), jnp.bfloat16)
+    lens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    results = {}
+    for kind in ("bf16", "int8"):
+        dt = jnp.bfloat16 if kind == "bf16" else jnp.int8
+        kv = jax.ShapeDtypeStruct((L, B, S, KVH, Dh), dt)
+        args = [q, kv, kv, lens]
+        in_sh = [q_sh, cache_sh, cache_sh, NamedSharding(mesh, P())]
+        if kind == "int8":
+            args.append(jax.ShapeDtypeStruct((L, B, S, KVH), jnp.float32))
+            in_sh.append(scale_sh)
+        with mesh:
+            fn = tower if kind == "bf16" else (lambda q, k, v, n, s: tower(q, k, v, n, s))
+            compiled = jax.jit(fn, in_shardings=tuple(in_sh)).lower(*args).compile()
+        t = analyze_text(compiled.as_text())
+        results[kind] = {
+            "bytes_per_device": t.bytes,
+            "memory_s": t.bytes / HBM_BW,
+            "collective_bytes": t.collective_bytes,
+        }
+    results["memory_reduction"] = results["bf16"]["memory_s"] / results["int8"]["memory_s"]
+    return results
+
+
+def main():
+    r = build_and_measure()
+    print(f"bf16 cache readout: memory {r['bf16']['memory_s']*1e3:8.1f} ms/device")
+    print(f"int8 cache readout: memory {r['int8']['memory_s']*1e3:8.1f} ms/device")
+    print(f"int8 KV memory-term reduction: {r['memory_reduction']:.2f}x")
+    art = os.path.join(os.path.dirname(__file__), "artifacts", "int8_kv_cell.json")
+    os.makedirs(os.path.dirname(art), exist_ok=True)
+    with open(art, "w") as f:
+        json.dump(r, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

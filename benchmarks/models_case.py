@@ -1,0 +1,45 @@
+"""Paper Figure 5(a,b): per-model case study — TTFT improvement shrinks as
+KV bytes/token grow (cache reuse saves less relative to recompute).
+
+We sweep three of the assigned architectures with small/medium/large
+KV-per-token footprints (the paper used GLM-4-8B 40KB / GLM-4-32B 60KB /
+Llama-3-8B 120KB)."""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+
+from . import common
+
+# (arch, kv bytes/token scaled 1/64 to container scale)
+CASES = ("glm4-9b", "qwen3-14b", "qwen2.5-32b")
+
+
+def run(scale: common.BenchScale = None, verbose=True):
+    out = {}
+    for arch in CASES:
+        cfg = get_config(arch)
+        kv_bpt = max(256, cfg.kv_bytes_per_token // 64)  # container scale
+        s = dataclasses.replace(
+            scale or common.BenchScale(), kv_bytes_per_token=kv_bpt, prompt_len=512
+        )
+        results = {}
+        for kind in ("lsm", "file"):
+            root = common.fresh_dir(tempfile.mkdtemp(prefix=f"case_{arch}_{kind}_"))
+            eng = common.make_engine(root, kind, s, arch=arch)
+            results[kind] = common.run_staged(eng, s)
+        out[arch] = {"kv_bytes_per_token": kv_bpt, **common.summarize(results)}
+        if verbose:
+            lsm, fl = out[arch]["lsm"], out[arch]["file"]
+            print(f"{arch:14s} kv/tok={kv_bpt:6d}B  hit {lsm['hit_rate']:.3f} vs {fl['hit_rate']:.3f}  "
+                  f"TTFT {lsm['ttft_s']:.3f}s vs {fl['ttft_s']:.3f}s "
+                  f"({100*(lsm['ttft_s']/fl['ttft_s']-1):+.1f}%)")
+    common.save_artifact("models_case", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

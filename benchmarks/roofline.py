@@ -1,0 +1,57 @@
+"""Roofline table (assignment deliverable g): read the dry-run artifacts
+and print the per-(arch x shape x mesh) three-term analysis."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, cells, get_config
+from repro.launch.dryrun import ART_DIR, cell_path
+
+from . import common
+
+
+def load_cells(pods: int = 1) -> List[Dict]:
+    rows = []
+    for arch, shape, skip in cells(include_skipped=True):
+        if skip:
+            rows.append({"arch": arch, "shape": shape, "skipped": skip})
+            continue
+        p = cell_path(arch, shape, pods)
+        if not os.path.exists(p):
+            rows.append({"arch": arch, "shape": shape, "missing": True})
+            continue
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(pods: int = 1, verbose=True):
+    rows = load_cells(pods)
+    ok = [r for r in rows if r.get("ok")]
+    if verbose:
+        hdr = (f"{'arch':18s} {'shape':12s} {'compute':>9s} {'memory':>9s} {'coll':>9s} "
+               f"{'bound':>10s} {'useful':>7s} {'MFU':>6s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            if r.get("skipped"):
+                print(f"{r['arch']:18s} {r['shape']:12s} SKIP ({r['skipped'][:48]})")
+                continue
+            if r.get("missing"):
+                print(f"{r['arch']:18s} {r['shape']:12s} MISSING")
+                continue
+            rl = r["roofline"]
+            print(f"{r['arch']:18s} {r['shape']:12s} {rl['compute_s']*1e3:8.1f}ms {rl['memory_s']*1e3:8.1f}ms "
+                  f"{rl['collective_s']*1e3:8.1f}ms {rl['bottleneck']:>10s} "
+                  f"{rl['useful_flop_ratio']:7.3f} {rl['mfu']:6.3f}")
+    common.save_artifact(f"roofline_{pods}pod", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(pods=int(sys.argv[1]) if len(sys.argv) > 1 else 1)

@@ -1,0 +1,82 @@
+"""Benchmark driver: ``python -m benchmarks.run`` executes every paper
+table/figure at container scale plus the kernel and roofline reports.
+
+  --quick  : smaller workloads (CI)
+  --skip   : comma-separated benchmark names to skip
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", default="", help="comma-separated benchmark names to skip")
+    args = ap.parse_args(argv)
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from . import common
+
+    # default scale = the calibrated pressure ratios of DESIGN.md §7 (the
+    # corpus/budget proportions where container-scale results track the
+    # paper's regime); --full doubles the working set for stress coverage
+    scale = common.BenchScale(requests_per_stage=12 if args.quick else 20,
+                              corpus_size=48)
+
+    t_all = time.time()
+    print("=" * 72)
+    print("SGLANG-LSM reproduction benchmarks (container scale; DESIGN.md §7)")
+    print("=" * 72)
+
+    if "overall" not in skip:
+        print("\n[1/7] overall (paper Fig. 4: hit rate + TTFT, 3 backends) ...")
+        from . import overall
+
+        overall.run(prompt_lens=(512,) if args.quick else (512, 1024), scale=scale)
+
+    if "models_case" not in skip:
+        print("\n[2/7] models_case (paper Fig. 5a,b: per-model KV size sweep) ...")
+        from . import models_case
+
+        models_case.run(scale=scale)
+
+    if "dynamic_compaction" not in skip:
+        print("\n[3/7] dynamic_compaction (paper Fig. 5c: adaptive on/off) ...")
+        from . import dynamic_compaction
+
+        dynamic_compaction.run(scale=scale)
+
+    if "store_scalability" not in skip:
+        print("\n[4/7] store_scalability (paper §4.2: file-count wall) ...")
+        from . import store_scalability
+
+        store_scalability.run(n_batches=24 if args.quick else 60)
+
+    if "store_ops" not in skip:
+        print("\n[5/7] store_ops (paper App. B: put/probe/get micro) ...")
+        from . import store_ops
+
+        store_ops.run()
+
+    if "kernels_micro" not in skip:
+        print("\n[6/7] kernels_micro (Pallas kernels: HBM-traffic roofline) ...")
+        from . import kernels_micro
+
+        kernels_micro.run()
+
+    if "roofline" not in skip:
+        print("\n[7/7] roofline (dry-run artifacts -> three-term table) ...")
+        from . import roofline
+
+        roofline.run(pods=1)
+
+    print(f"\nall benchmarks done in {time.time() - t_all:.0f}s; artifacts in benchmarks/artifacts/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

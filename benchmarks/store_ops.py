@@ -1,0 +1,67 @@
+"""Paper Appendix B: store-operation microbenchmarks — put_batch / probe /
+get_batch latency vs batch size, plus Bloom-filter probe pruning."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.codec import CODEC_INT8, BatchCodec
+from repro.core.store import KVBlockStore
+
+from . import common
+
+
+def run(verbose=True):
+    root = tempfile.mkdtemp(prefix="storeops_")
+    store = KVBlockStore(os.path.join(root, "s"), block_size=16,
+                         codec=BatchCodec(CODEC_INT8, use_zlib=True))
+    rng = np.random.default_rng(0)
+    template = rng.standard_normal((16, 512)).astype(np.float16)
+    out = {"put": {}, "get": {}, "probe": {}}
+
+    seqs = {}
+    for nb in (1, 4, 16, 64):
+        tokens = rng.integers(0, 50000, size=nb * 16).tolist()
+        seqs[nb] = tokens
+        t0 = time.perf_counter()
+        store.put_batch(tokens, [template] * nb)
+        out["put"][nb] = (time.perf_counter() - t0) * 1e3
+    store.flush()
+
+    for nb, tokens in seqs.items():
+        t0 = time.perf_counter()
+        got = store.get_batch(tokens, nb * 16)
+        out["get"][nb] = (time.perf_counter() - t0) * 1e3
+        assert len(got) == nb
+
+    # probe: hit vs guaranteed-miss (Bloom should prune the misses)
+    hit_tokens = seqs[64]
+    miss_tokens = rng.integers(50001, 99999, size=64 * 16).tolist()
+    t0 = time.perf_counter()
+    n = store.probe(hit_tokens)
+    out["probe"]["hit_ms"] = (time.perf_counter() - t0) * 1e3
+    assert n == 64 * 16
+    lk0 = store.stats.probe_lookups
+    t0 = time.perf_counter()
+    n = store.probe(miss_tokens)
+    out["probe"]["miss_ms"] = (time.perf_counter() - t0) * 1e3
+    out["probe"]["miss_lookups"] = store.stats.probe_lookups - lk0
+    assert n == 0
+    out["compression_ratio"] = store.stats.compression_ratio
+
+    if verbose:
+        print("put_batch ms:", {k: round(v, 2) for k, v in out["put"].items()})
+        print("get_batch ms:", {k: round(v, 2) for k, v in out["get"].items()})
+        print("probe:", {k: (round(v, 3) if isinstance(v, float) else v) for k, v in out["probe"].items()})
+        print(f"compression ratio: {out['compression_ratio']:.2f}x")
+    store.close()
+    common.save_artifact("store_ops", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Fault tolerance end-to-end: a serving replica crashes mid-workload; a
+replacement reopens the SAME disk store (WAL + manifest recovery), takes
+over the unserved queue (request re-dispatch), and keeps hitting the
+prefixes the dead replica populated — nothing cached on disk is lost.
+
+    PYTHONPATH=src python examples/failover.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.cache.hierarchy import CacheHierarchy
+from repro.configs import get_config
+from repro.core.store import KVBlockStore
+from repro.serving import ComputeModel, ServingEngine
+from repro.workload import StagedWorkload
+
+BLOCK = 16
+PROMPT = 256
+
+
+def make_replica(root: str) -> ServingEngine:
+    store = KVBlockStore(root, block_size=BLOCK)  # reopens + recovers if exists
+    h = CacheHierarchy(BLOCK, device_budget_blocks=64, host_budget_blocks=128, store=store)
+    cfg = get_config("glm4-9b")
+    return ServingEngine(h, ComputeModel(cfg), kv_bytes_per_token=512)
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="failover_") + "/store"
+    wl = StagedWorkload(prompt_len=PROMPT, requests_per_stage=24,
+                        stages=(0.7,), block_size=BLOCK, corpus_size=6, seed=0)
+    queue = wl.stage_requests(0)
+
+    # --- replica A serves the first half, then "crashes" hard -------------
+    a = make_replica(root)
+    for p in wl.warmup_prompts(6 * PROMPT):
+        a.submit(type("R", (), {"tokens": p, "rid": -1, "stage": -1})())
+    a.run()
+    half = len(queue) // 2
+    for r in queue[:half]:
+        a.submit(r)
+    recs_a = a.run()
+    hit_a = np.mean([r.reused_tokens / r.prompt_len for r in recs_a])
+    print(f"[replica A] served {len(recs_a)} requests, hit {hit_a:.2f}")
+    # hard crash: no close(), no flush of the memtable — WAL must cover it
+    del a
+
+    # --- replica B recovers the store and takes over the queue ------------
+    b = make_replica(root)  # WAL replay + manifest recovery happens here
+    for r in queue[half:]:  # re-dispatch the dead replica's queue
+        b.submit(r)
+    recs_b = b.run()
+    hit_b = np.mean([r.reused_tokens / r.prompt_len for r in recs_b])
+    print(f"[replica B] recovered store ({b.h.store.index.n_entries} index entries, "
+          f"{b.h.store.file_count} files) and served {len(recs_b)} re-dispatched requests, "
+          f"hit {hit_b:.2f}")
+    assert hit_b >= 0.5, "disk-tier prefixes must survive the crash"
+    print("ok — cached prefixes survived the replica failure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: the SGLANG-LSM public API in 40 lines (paper Fig. 6).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.store import KVBlockStore
+
+db = KVBlockStore(tempfile.mkdtemp(prefix="quickstart_"), block_size=4)
+
+# --- first request: "Who wrote Odyssey?" ---------------------------------
+token_0 = [1, 11644, 5456, 6715, 952, 7759, 29973, 2]  # 8 tokens = 2 blocks
+kvcache_0 = [np.random.randn(4, 64).astype(np.float16) for _ in range(2)]
+db.put_batch(token_0, kvcache_0)
+print(f"put_batch: stored {db.stats.put_blocks} blocks "
+      f"({db.stats.compression_ratio:.2f}x compressed)")
+
+# --- second request shares the 4-token prefix ----------------------------
+token_1 = [1, 11644, 5456, 6715, 7904, 1026, 29973, 2]
+reuse = db.probe(token_1)
+print(f"probe: longest cached prefix = {reuse} tokens")
+assert reuse == 4
+
+reuse_kvcache = db.get_batch(token_1, reuse)
+print(f"get_batch: loaded {len(reuse_kvcache)} block(s) of shape {reuse_kvcache[0].shape}")
+
+# only the uncached suffix needs recomputation
+recomp = token_1[reuse:]
+print(f"recompute only {len(recomp)} tokens instead of {len(token_1)}")
+kvcache_1 = [np.random.randn(4, 64).astype(np.float16)]
+db.put_batch(token_1, kvcache_1, start_block=reuse // 4)
+
+# --- background services (paper §3.3 / §3.4) ------------------------------
+report = db.maintenance()
+print(f"maintenance: {report}")
+print(f"store: {db.file_count} files on disk, {db.disk_bytes} bytes, "
+      f"controller mix {db.controller.mix()}")
+db.close()
+print("ok")

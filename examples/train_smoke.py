@@ -1,0 +1,45 @@
+"""Train a ~small LM for a few hundred steps with checkpoint/auto-resume
+(deliverable b): kill it mid-run and re-run — it resumes from the newest
+committed checkpoint and replays the exact trajectory.
+
+    PYTHONPATH=src python examples/train_smoke.py [--steps 200]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.configs import get_config
+from repro.training.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--simulate-crash", action="store_true",
+                    help="crash at 40% then auto-resume, asserting identical losses")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="train_smoke_")
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=max(10, args.steps // 10),
+                       ckpt_dir=ckpt_dir, log_every=max(1, args.steps // 10))
+
+    if args.simulate_crash:
+        crash_at = int(args.steps * 0.4)
+        print(f"[example] running to step {crash_at}, then crashing ...")
+        r1 = train(cfg, tcfg, crash_after=crash_at)
+        assert r1["crashed"]
+        print(f"[example] crashed at {r1['step']}; restarting (auto-resume) ...")
+        r2 = train(cfg, tcfg)
+        print(f"[example] resumed from step {r2['resumed_from']}, finished at {r2['step']}")
+    else:
+        res = train(cfg, tcfg)
+        print(f"[example] done: {res['step']} steps, "
+              f"loss {res['losses'][0]:.3f} -> {res['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Hierarchical KV-cache manager: radix tree + device/host memory tiers +
+a pluggable disk backend (``KVBlockStore`` or one of the paper's baselines).
+
+This is the integration point the paper describes in §3.2: the in-memory
+radix tree and RadixAttention logic are preserved; only the disk backend
+behind it is swapped.  ``acquire`` implements the longest-prefix reuse path
+(radix match, then a disk ``probe`` to extend the match, then ``get_batch``
+promotion), and ``commit`` implements write-through population.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .radix import (
+    TIER_DEVICE,
+    TIER_DISK,
+    TIER_HOST,
+    TIER_NONE,
+    RadixNode,
+    RadixTree,
+)
+
+
+@dataclass
+class CacheStats:
+    requests: int = 0
+    tokens_requested: int = 0
+    tokens_hit_device: int = 0
+    tokens_hit_host: int = 0
+    tokens_hit_disk: int = 0
+    tokens_missed: int = 0
+    promote_s: float = 0.0  # disk -> memory I/O time
+    demotions: int = 0
+    drops: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        hit = self.tokens_hit_device + self.tokens_hit_host + self.tokens_hit_disk
+        return hit / max(1, self.tokens_requested)
+
+
+@dataclass
+class Acquisition:
+    nodes: List[RadixNode]
+    reuse_tokens: int  # tokens whose KV is now device-resident
+    device_tokens: int
+    host_tokens: int
+    disk_tokens: int
+    io_s: float  # measured promotion I/O time
+
+
+class CacheHierarchy:
+    def __init__(
+        self,
+        block_size: int,
+        device_budget_blocks: int,
+        host_budget_blocks: int,
+        store=None,  # disk backend (KVBlockStore / FilePerObjectStore / None)
+        write_through: bool = True,
+    ):
+        self.tree = RadixTree(block_size)
+        self.block_size = block_size
+        self.device_budget = device_budget_blocks
+        self.host_budget = host_budget_blocks
+        self.store = store
+        self.write_through = write_through
+        self.device_blocks = 0
+        self.host_blocks = 0
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------ internals
+    def _make_room(self, tier: int, need: int) -> None:
+        """Demote LRU leaves until `need` blocks fit in `tier`."""
+        if tier == TIER_DEVICE:
+            budget, used = self.device_budget, self.device_blocks
+        else:
+            budget, used = self.host_budget, self.host_blocks
+        overflow = used + need - budget
+        while overflow > 0:
+            leaves = self.tree.evictable_leaves(tier)
+            if not leaves:
+                break  # everything locked: admit over budget rather than stall
+            # demote as many of this frontier as needed, then re-derive the
+            # frontier (parents become evictable once children leave)
+            for leaf in leaves[:overflow]:
+                self._demote(leaf)
+            overflow -= min(overflow, len(leaves))
+
+    def _demote(self, node: RadixNode) -> None:
+        if node.tier == TIER_DEVICE:
+            self._make_room(TIER_HOST, 1)
+            if self.host_blocks < self.host_budget:
+                node.tier = TIER_HOST
+                self.host_blocks += 1
+            else:
+                self._spill_to_disk(node)
+            self.device_blocks -= 1
+            self.stats.demotions += 1
+        elif node.tier == TIER_HOST:
+            self._spill_to_disk(node)
+            self.host_blocks -= 1
+            self.stats.demotions += 1
+
+    def _spill_to_disk(self, node: RadixNode) -> None:
+        if self.store is not None and not node.on_disk and node.data is not None:
+            tokens = self._path_tokens(node)
+            self.store.put_batch(tokens, [node.data], start_block=node.depth - 1)
+            node.on_disk = True
+        node.data = None
+        if self.store is not None and node.on_disk:
+            node.tier = TIER_DISK
+        else:
+            # no disk backend: block is lost (the memory-only baseline)
+            node.tier = TIER_NONE
+            self.stats.drops += 1
+            self.tree.drop(node)
+
+    @staticmethod
+    def _path_tokens(node: RadixNode) -> List[int]:
+        toks: List[int] = []
+        chain = []
+        cur = node
+        while cur is not None and cur.parent is not None:
+            chain.append(cur)
+            cur = cur.parent
+        for n in reversed(chain):
+            toks.extend(n.block)
+        return toks
+
+    # ---------------------------------------------------------------- acquire
+    def acquire(self, tokens: Sequence[int]) -> Acquisition:
+        """Longest-prefix reuse: radix match, disk-probe extension, and
+        promotion of every matched block to the device tier.  The returned
+        node path is locked until ``release``."""
+        B = self.block_size
+        self.stats.requests += 1
+        self.stats.tokens_requested += len(tokens)
+        t0 = time.perf_counter()
+        chain = self.tree.match_prefix(tokens)
+        dev = host = disk = 0
+        mem_matched = len(chain) * B
+
+        # classify memory-resident part
+        for n in chain:
+            if n.tier == TIER_DEVICE:
+                dev += 1
+            elif n.tier == TIER_HOST:
+                host += 1
+            elif n.tier == TIER_DISK:
+                disk += 1
+
+        # extend match through the disk backend beyond the in-memory chain
+        disk_ext_blocks: List[np.ndarray] = []
+        if self.store is not None and mem_matched < (len(tokens) // B) * B:
+            probed = self.store.probe(tokens)
+            if probed > mem_matched:
+                got = self.store.get_batch(tokens, probed)
+                usable = got[len(chain) :]  # blocks past the memory chain
+                disk_ext_blocks = usable
+                disk += len(usable)
+
+        # promote disk-resident chain nodes (their data lives only on disk)
+        need_fetch = [n for n in chain if n.tier == TIER_DISK]
+        if need_fetch and self.store is not None:
+            upto = need_fetch[-1].depth * B
+            got = self.store.get_batch(tokens, upto)
+            for n in need_fetch:
+                i = n.depth - 1
+                if i < len(got):
+                    n.data = got[i]
+                else:  # disk lost it (eviction): degrade to miss
+                    n.tier = TIER_NONE
+                    disk -= 1
+
+        # materialize the full usable chain on device
+        nodes = list(chain)
+        if disk_ext_blocks:
+            ext_tokens = tokens[: (len(chain) + len(disk_ext_blocks)) * B]
+            new_nodes = self.tree.insert_path(ext_tokens)[len(chain) :]
+            for n, blk in zip(new_nodes, disk_ext_blocks):
+                n.data = blk
+                n.tier = TIER_HOST  # staged; promoted below
+                n.on_disk = True
+                self.host_blocks += 1
+            nodes.extend(new_nodes)
+
+        # cut the chain at the first unusable node
+        usable: List[RadixNode] = []
+        for n in nodes:
+            if n.tier in (TIER_DEVICE, TIER_HOST) or (n.tier == TIER_DISK and n.data is not None):
+                usable.append(n)
+            else:
+                break
+        promote = [n for n in usable if n.tier != TIER_DEVICE]
+        self._make_room(TIER_DEVICE, len(promote))
+        for n in promote:
+            if n.tier == TIER_HOST:
+                self.host_blocks -= 1
+            n.tier = TIER_DEVICE
+            self.device_blocks += 1
+        self.tree.lock_path(usable)
+
+        io_s = time.perf_counter() - t0
+        self.stats.promote_s += io_s
+        reuse = len(usable) * B
+        self.stats.tokens_hit_device += dev * B
+        self.stats.tokens_hit_host += host * B
+        self.stats.tokens_hit_disk += disk * B
+        self.stats.tokens_missed += max(0, len(tokens) - reuse)
+        return Acquisition(
+            nodes=usable,
+            reuse_tokens=reuse,
+            device_tokens=dev * B,
+            host_tokens=host * B,
+            disk_tokens=disk * B,
+            io_s=io_s,
+        )
+
+    # ----------------------------------------------------------------- commit
+    def commit(self, tokens: Sequence[int], new_blocks: List[np.ndarray], acq: Acquisition) -> None:
+        """Install freshly computed KV blocks (covering tokens beyond
+        ``acq.reuse_tokens``) into the device tier, write-through to disk."""
+        B = self.block_size
+        start_block = acq.reuse_tokens // B
+        total_blocks = len(tokens) // B
+        n_new = min(len(new_blocks), total_blocks - start_block)
+        if n_new <= 0:
+            return
+        self._make_room(TIER_DEVICE, n_new)
+        path = self.tree.insert_path(tokens[: (start_block + n_new) * B])
+        fresh = path[start_block:]
+        for n, blk in zip(fresh, new_blocks):
+            if n.tier == TIER_DEVICE:
+                continue
+            n.data = blk
+            n.tier = TIER_DEVICE
+            self.device_blocks += 1
+        if self.write_through and self.store is not None:
+            self.store.put_batch(tokens, new_blocks[:n_new], start_block=start_block)
+            for n in fresh:
+                n.on_disk = True
+
+    def release(self, acq: Acquisition) -> None:
+        self.tree.unlock_path(acq.nodes)
+
+    # ----------------------------------------------------------------- misc
+    def maintenance(self) -> dict:
+        if self.store is not None:
+            return self.store.maintenance()
+        return {}
+
+    @property
+    def hit_rate(self) -> float:
+        return self.stats.hit_rate

@@ -1,0 +1,28 @@
+"""SGLANG-LSM core: prefix-preserving LSM storage engine for KV cache
+(paper §3), plus the baseline backends it is evaluated against."""
+
+from .baselines import FilePerObjectStore, MemoryOnlyStore
+from .codec import CODEC_INT8, CODEC_RAW, BatchCodec
+from .controller import AdaptiveController
+from .costmodel import TreeShape, cost_terms, optimize, weighted_cost
+from .keycodec import block_key, decode_tokens, encode_tokens
+from .lsm import LSMTree
+from .store import KVBlockStore
+
+__all__ = [
+    "KVBlockStore",
+    "FilePerObjectStore",
+    "MemoryOnlyStore",
+    "LSMTree",
+    "AdaptiveController",
+    "BatchCodec",
+    "CODEC_INT8",
+    "CODEC_RAW",
+    "TreeShape",
+    "cost_terms",
+    "weighted_cost",
+    "optimize",
+    "encode_tokens",
+    "decode_tokens",
+    "block_key",
+]

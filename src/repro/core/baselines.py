@@ -1,0 +1,280 @@
+"""Baseline disk/memory KV-cache stores the paper evaluates against (§4.1):
+
+* ``FilePerObjectStore`` — SGLang(file): one file per KV block, named by a
+  hash of the token prefix.  Exhibits exactly the §1 pathologies: per-file
+  open/write/close syscalls, no batching, filesystem block rounding (a
+  2 KiB payload consumes >=4 KiB + inode), metadata pressure as file counts
+  grow.  Filesystem overhead is charged for real via ``st_blocks``-style
+  rounding so both backends compete under the same *physical* byte budget.
+
+* ``MemoryOnlyStore`` — SGLang(memory): LRU dict bounded by a byte budget
+  (models HBM+DRAM capacity, which forces the evictions the paper
+  describes).
+
+Both expose the ``put_batch / probe / get_batch / maintenance`` contract of
+``KVBlockStore`` so the serving engine and benchmarks are backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .codec import CODEC_RAW, BatchCodec
+from .keycodec import encode_tokens
+from .store import StoreStats
+
+FS_BLOCK = 4096  # filesystem allocation unit
+INODE_OVERHEAD = 256  # metadata bytes charged per file (inode + dirent)
+
+
+def fs_footprint(payload_bytes: int) -> int:
+    """Physical bytes a payload costs in a file-per-object layout."""
+    blocks = (payload_bytes + FS_BLOCK - 1) // FS_BLOCK
+    return max(1, blocks) * FS_BLOCK + INODE_OVERHEAD
+
+
+class FilePerObjectStore:
+    """One file per KV block (state-of-practice disk backend)."""
+
+    name = "file"
+
+    def __init__(
+        self,
+        root: str,
+        block_size: int = 16,
+        codec: Optional[BatchCodec] = None,
+        budget_bytes: Optional[int] = None,
+        max_files: Optional[int] = None,
+        meta_penalty_per_file_s: float = 0.0,
+    ):
+        """``meta_penalty_per_file_s``: optional modeled metadata latency per
+        file operation per million resident files (calibrated by
+        ``benchmarks/store_scalability.py`` from real measurements; default
+        off so everything measured is real I/O)."""
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.block_size = block_size
+        # the file backend cannot batch-compress (paper §3.4), so default raw
+        self.codec = codec or BatchCodec(CODEC_RAW, use_zlib=False)
+        self.budget_bytes = budget_bytes
+        self.max_files = max_files
+        self.meta_penalty = meta_penalty_per_file_s
+        self._lru: "OrderedDict[str, int]" = OrderedDict()  # path -> fs bytes
+        self.fs_bytes = 0
+        self.stats = StoreStats()
+        self.modeled_penalty_s = 0.0
+        self._recover()
+
+    def _recover(self) -> None:
+        for dirpath, _, files in os.walk(self.root):
+            for f in files:
+                p = os.path.join(dirpath, f)
+                fp = fs_footprint(os.path.getsize(p))
+                self._lru[p] = fp
+                self.fs_bytes += fp
+
+    def _path(self, tokens: Sequence[int], n_tokens: int) -> str:
+        h = hashlib.sha1(encode_tokens(tokens[:n_tokens])).hexdigest()
+        return os.path.join(self.root, h[:2], h[2:4], h + ".bin")
+
+    def _charge_meta(self) -> None:
+        if self.meta_penalty:
+            self.modeled_penalty_s += self.meta_penalty * (len(self._lru) / 1e6)
+
+    def _touch(self, path: str) -> None:
+        if path in self._lru:
+            self._lru.move_to_end(path)
+
+    def put_batch(self, tokens, blocks, start_block: int = 0, skip_existing: bool = True) -> int:
+        B = self.block_size
+        t0 = time.perf_counter()
+        wrote = 0
+        for i, block in enumerate(blocks):
+            end = (start_block + i + 1) * B
+            if end > len(tokens):
+                break
+            path = self._path(tokens, end)
+            self._charge_meta()
+            if skip_existing and path in self._lru:
+                self._touch(path)
+                continue
+            if self.max_files is not None and len(self._lru) >= self.max_files:
+                # the §4.2 wall: filesystem refuses/degrades past the file cap
+                continue
+            payload = self.codec.encode(np.asarray(block))
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "wb") as f:  # one open/write/close per object
+                f.write(payload)
+            fp = fs_footprint(len(payload))
+            self._lru[path] = fp
+            self.fs_bytes += fp
+            self.stats.payload_bytes_in += np.asarray(block).nbytes
+            self.stats.payload_bytes_stored += len(payload)
+            wrote += 1
+        self.stats.put_blocks += wrote
+        self.stats.put_tokens += wrote * B
+        self.stats.io_write_s += time.perf_counter() - t0
+        if self.budget_bytes is not None:
+            self._evict_to_budget()
+        return wrote
+
+    def probe(self, tokens) -> int:
+        B = self.block_size
+        max_blocks = len(tokens) // B
+        self.stats.probes += 1
+        lo, hi = 0, max_blocks
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            self._charge_meta()
+            self.stats.probe_lookups += 1
+            if os.path.exists(self._path(tokens, mid * B)):  # stat() syscall
+                lo = mid
+            else:
+                hi = mid - 1
+        if lo == 0:
+            self.stats.probe_empty += 1
+        else:
+            self.stats.probe_hits += 1
+        return lo * B
+
+    def get_batch(self, tokens, n_tokens: int) -> List[np.ndarray]:
+        B = self.block_size
+        t0 = time.perf_counter()
+        out: List[np.ndarray] = []
+        for i in range(n_tokens // B):
+            path = self._path(tokens, (i + 1) * B)
+            self._charge_meta()
+            if not os.path.exists(path):
+                break
+            with open(path, "rb") as f:  # open/read/close per object
+                out.append(BatchCodec.decode(f.read()))
+            self._touch(path)
+        self.stats.get_blocks += len(out)
+        self.stats.get_tokens += len(out) * B
+        self.stats.io_read_s += time.perf_counter() - t0
+        return out
+
+    def _evict_to_budget(self) -> None:
+        while self.fs_bytes > self.budget_bytes and self._lru:
+            path, fp = self._lru.popitem(last=False)
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self.fs_bytes -= fp
+            self.stats.evicted_blocks += 1
+
+    def maintenance(self, compact_steps: int = 0) -> dict:
+        if self.budget_bytes is not None:
+            self._evict_to_budget()
+        return {}
+
+    @property
+    def disk_bytes(self) -> int:
+        return self.fs_bytes
+
+    @property
+    def file_count(self) -> int:
+        return len(self._lru)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class MemoryOnlyStore:
+    """In-memory LRU KV cache bounded by a byte budget."""
+
+    name = "memory"
+
+    def __init__(self, budget_bytes: int, block_size: int = 16, **_):
+        self.block_size = block_size
+        self.budget_bytes = budget_bytes
+        self._lru: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self.bytes = 0
+        self.stats = StoreStats()
+
+    def _key(self, tokens, n_tokens: int) -> bytes:
+        return encode_tokens(tokens[:n_tokens])
+
+    def put_batch(self, tokens, blocks, start_block: int = 0, skip_existing: bool = True) -> int:
+        B = self.block_size
+        wrote = 0
+        for i, block in enumerate(blocks):
+            end = (start_block + i + 1) * B
+            if end > len(tokens):
+                break
+            key = self._key(tokens, end)
+            if skip_existing and key in self._lru:
+                self._lru.move_to_end(key)
+                continue
+            arr = np.asarray(block)
+            self._lru[key] = arr
+            self.bytes += arr.nbytes
+            self.stats.payload_bytes_in += arr.nbytes
+            self.stats.payload_bytes_stored += arr.nbytes
+            wrote += 1
+        while self.bytes > self.budget_bytes and self._lru:
+            _, old = self._lru.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.stats.evicted_blocks += 1
+        self.stats.put_blocks += wrote
+        self.stats.put_tokens += wrote * B
+        return wrote
+
+    def probe(self, tokens) -> int:
+        B = self.block_size
+        self.stats.probes += 1
+        lo, hi = 0, len(tokens) // B
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            self.stats.probe_lookups += 1
+            if self._key(tokens, mid * B) in self._lru:
+                lo = mid
+            else:
+                hi = mid - 1
+        if lo == 0:
+            self.stats.probe_empty += 1
+        else:
+            self.stats.probe_hits += 1
+        return lo * B
+
+    def get_batch(self, tokens, n_tokens: int) -> List[np.ndarray]:
+        B = self.block_size
+        out: List[np.ndarray] = []
+        for i in range(n_tokens // B):
+            key = self._key(tokens, (i + 1) * B)
+            blk = self._lru.get(key)
+            if blk is None:
+                break
+            self._lru.move_to_end(key)
+            out.append(blk)
+        self.stats.get_blocks += len(out)
+        self.stats.get_tokens += len(out) * B
+        return out
+
+    def maintenance(self, compact_steps: int = 0) -> dict:
+        return {}
+
+    @property
+    def disk_bytes(self) -> int:
+        return self.bytes
+
+    @property
+    def file_count(self) -> int:
+        return len(self._lru)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass

@@ -1,0 +1,266 @@
+"""``KVBlockStore`` — the public contract of SGLANG-LSM (paper §3.2, Fig. 6):
+
+    put_batch(tokens, blocks)   store sequential KV-cache blocks
+    probe(tokens) -> n_tokens   longest cached prefix (binary search +
+                                Bloom-pruned LSM point lookups)
+    get_batch(tokens, n)        one LSM range scan + coalesced tensor-log
+                                batch read + batch decode
+
+Two-phase write protocol: tensor payloads are committed to the tensor log
+first; the atomic commit point is the WAL-backed index insert (a crash in
+between leaves unreferenced log records, which the merge service garbage
+collects).
+
+Index entry value layout: ``LogPointer(20B) | u8 flags`` — compact metadata
+only, per key-value separation.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .codec import CODEC_INT8, BatchCodec
+from .controller import OP_EMPTY, OP_RANGE, OP_READ, OP_WRITE, AdaptiveController
+from .keycodec import encode_tokens
+from .lsm import LSMTree
+from .merge import TensorFileMerger
+from .tensorlog import PTR_BYTES, LogPointer, TensorLog
+
+ENTRY_BYTES = PTR_BYTES + 1
+
+
+@dataclass
+class StoreStats:
+    put_blocks: int = 0
+    put_tokens: int = 0
+    get_blocks: int = 0
+    get_tokens: int = 0
+    probes: int = 0
+    probe_hits: int = 0
+    probe_empty: int = 0
+    probe_lookups: int = 0
+    payload_bytes_in: int = 0
+    payload_bytes_stored: int = 0
+    evicted_blocks: int = 0
+    io_read_s: float = 0.0
+    io_write_s: float = 0.0
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.payload_bytes_in / max(1, self.payload_bytes_stored)
+
+
+class KVBlockStore:
+    """Disk-resident KV-cache store over an LSM index + tensor log."""
+
+    name = "lsm"
+
+    def __init__(
+        self,
+        root: str,
+        block_size: int = 16,
+        codec: Optional[BatchCodec] = None,
+        buffer_bytes: int = 1 << 20,
+        size_ratio: int = 4,
+        runs_per_level: int = 1,
+        bloom_bits_per_key: float = 10.0,
+        vlog_file_bytes: int = 32 * 1024 * 1024,
+        max_log_files: int = 64,
+        garbage_threshold: float = 0.5,
+        budget_bytes: Optional[int] = None,
+        adaptive: bool = True,
+        controller_window: int = 4096,
+        fsync: bool = False,
+    ):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.block_size = block_size
+        self.codec = codec or BatchCodec(CODEC_INT8, use_zlib=True)
+        self.budget_bytes = budget_bytes
+        self.index = LSMTree(
+            os.path.join(root, "index"),
+            buffer_bytes=buffer_bytes,
+            size_ratio=size_ratio,
+            runs_per_level=runs_per_level,
+            bloom_bits_per_key=bloom_bits_per_key,
+            fsync=fsync,
+        )
+        self.log = TensorLog(os.path.join(root, "log"), max_file_bytes=vlog_file_bytes, fsync_writes=fsync)
+        self.merger = TensorFileMerger(
+            self.log, self.index, max_files=max_log_files, garbage_threshold=garbage_threshold
+        )
+        self.controller = AdaptiveController(
+            self.index, window=controller_window, entry_bytes=ENTRY_BYTES, enabled=adaptive
+        )
+        self.stats = StoreStats()
+
+    # ------------------------------------------------------------------ keys
+    def _key(self, tokens: Sequence[int], n_tokens: int) -> bytes:
+        return encode_tokens(tokens[:n_tokens])
+
+    @staticmethod
+    def _pack_value(ptr: LogPointer, flags: int = 0) -> bytes:
+        return ptr.pack() + struct.pack("<B", flags)
+
+    @staticmethod
+    def _unpack_value(v: bytes) -> LogPointer:
+        return LogPointer.unpack(v)
+
+    # ------------------------------------------------------------------- put
+    def put_batch(
+        self,
+        tokens: Sequence[int],
+        blocks: Sequence[np.ndarray],
+        start_block: int = 0,
+        skip_existing: bool = True,
+    ) -> int:
+        """Store ``blocks[i]`` as the KV cache of tokens
+        ``[(start_block+i)·B : (start_block+i+1)·B)``.  Returns #blocks
+        written (duplicates skipped)."""
+        B = self.block_size
+        t0 = time.perf_counter()
+        records = []  # (key, payload)
+        for i, block in enumerate(blocks):
+            bi = start_block + i
+            end = (bi + 1) * B
+            if end > len(tokens):
+                break
+            key = self._key(tokens, end)
+            if skip_existing:
+                found, _ = self.index.get(key)
+                if found:
+                    continue
+            payload = self.codec.encode(np.asarray(block))
+            self.stats.payload_bytes_in += np.asarray(block).nbytes
+            self.stats.payload_bytes_stored += len(payload)
+            records.append((key, payload))
+        if not records:
+            return 0
+        # phase 1: tensor log append (sequential, one syscall)
+        ptrs = self.log.append_batch(records)
+        # phase 2: atomic index insert (WAL-backed commit point)
+        self.index.put_batch((k, self._pack_value(p)) for (k, _), p in zip(records, ptrs))
+        self.controller.record(OP_WRITE, len(records))
+        self.stats.put_blocks += len(records)
+        self.stats.put_tokens += len(records) * B
+        self.stats.io_write_s += time.perf_counter() - t0
+        return len(records)
+
+    # ----------------------------------------------------------------- probe
+    def probe(self, tokens: Sequence[int]) -> int:
+        """Longest cached prefix length in tokens (multiple of block_size).
+        Binary search over block counts; each step is an LSM point lookup
+        (paper App. B: Bloom filters prune the misses)."""
+        B = self.block_size
+        max_blocks = len(tokens) // B
+        self.stats.probes += 1
+        if max_blocks == 0:
+            self.stats.probe_empty += 1
+            self.controller.record(OP_EMPTY, 1)
+            return 0
+        lo, hi = 0, max_blocks  # invariant: block count `lo` exists (0 = root)
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            found, _ = self.index.get(self._key(tokens, mid * B))
+            self.stats.probe_lookups += 1
+            self.controller.record(OP_READ if found else OP_EMPTY, 1)
+            if found:
+                lo = mid
+            else:
+                hi = mid - 1
+        if lo == 0:
+            self.stats.probe_empty += 1
+        else:
+            self.stats.probe_hits += 1
+        return lo * B
+
+    # ------------------------------------------------------------------- get
+    def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
+        """Load the cached blocks covering ``tokens[:n_tokens]``: one index
+        range scan, then a coalesced batch read from the tensor log."""
+        B = self.block_size
+        n_blocks = n_tokens // B
+        if n_blocks == 0:
+            return []
+        t0 = time.perf_counter()
+        start = self._key(tokens, B)
+        end = self._key(tokens, n_blocks * B) + b"\x00"
+        wanted: Dict[bytes, int] = {self._key(tokens, (i + 1) * B): i for i in range(n_blocks)}
+        ptrs: List[Optional[LogPointer]] = [None] * n_blocks
+        for k, v in self.index.range(start, end):
+            idx = wanted.get(k)
+            if idx is not None:
+                ptrs[idx] = self._unpack_value(v)
+        self.controller.record(OP_RANGE, 1)
+        present = [(i, p) for i, p in enumerate(ptrs) if p is not None]
+        blocks: List[Optional[np.ndarray]] = [None] * n_blocks
+        if present:
+            recs = self.log.read_batch([p for _, p in present])
+            for (i, _), (_, payload) in zip(present, recs):
+                blocks[i] = BatchCodec.decode(payload)
+        # only the contiguous prefix is usable as KV cache
+        out: List[np.ndarray] = []
+        for b in blocks:
+            if b is None:
+                break
+            out.append(b)
+        self.stats.get_blocks += len(out)
+        self.stats.get_tokens += len(out) * B
+        self.stats.io_read_s += time.perf_counter() - t0
+        return out
+
+    # ------------------------------------------------------------ lifecycle
+    def maintenance(self, compact_steps: int = 8) -> dict:
+        """One maintenance cycle: index compaction, tensor-file merging, and
+        budget eviction.  Deterministic (no background thread) so tests and
+        benchmarks control scheduling; ``serving.engine`` calls it between
+        batches, mirroring the paper's 'scheduled compaction cycles'."""
+        rep: dict = {}
+        rep["compactions"] = self.index.maybe_compact(compact_steps)
+        if self.merger.needed():
+            m = self.merger.run()
+            rep["merge"] = {"files": m.files_removed, "moved": m.records_moved, "reclaimed": m.bytes_reclaimed}
+        if self.budget_bytes is not None:
+            rep["evicted_files"] = self._evict_to_budget()
+        return rep
+
+    def _evict_to_budget(self) -> int:
+        """FIFO file eviction: oldest tensor-log files are dropped (their
+        index entries tombstoned) until under budget.  Hot data survives
+        because the merge service continuously rewrites live records into
+        young files (WiscKey-style age segregation)."""
+        evicted = 0
+        while self.disk_bytes > self.budget_bytes and self.log.file_count > 1:
+            fid = self.log.file_ids()[0]
+            keys = [key for _, key, _ in self.log.scan_file(fid)]
+            for key in keys:
+                found, v = self.index.get(key)
+                if found and self._unpack_value(v).file_id == fid:
+                    self.index.delete(key)
+                    self.stats.evicted_blocks += 1
+            self.log.remove_file(fid)
+            evicted += 1
+        return evicted
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def disk_bytes(self) -> int:
+        return self.log.total_bytes + self.index.disk_bytes
+
+    @property
+    def file_count(self) -> int:
+        return self.log.file_count + self.index.n_runs
+
+    def flush(self) -> None:
+        self.index.flush()
+        self.log.sync()
+
+    def close(self) -> None:
+        self.index.close()
+        self.log.close()

@@ -1,0 +1,203 @@
+"""Tensor log: the value side of key-value separation (paper §3.2,
+WiscKey-style).  Large immutable KV-cache payloads are appended to
+sequential log files; the LSM index stores only ``(file_id, offset,
+length)`` pointers.  Compaction of the index never touches these files,
+bounding write amplification.
+
+Record layout (self-describing so the merge service can relocate records
+without consulting the index)::
+
+    u32 crc | u32 klen | u32 plen | key | payload
+
+Batch reads coalesce adjacent ``(file, offset)`` ranges into single
+sequential reads — this is the mechanism that converts the file-per-object
+random-I/O pattern into sequential I/O (paper App. B, Get Batch).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+_HDR = struct.Struct("<III")
+
+
+@dataclass(frozen=True)
+class LogPointer:
+    file_id: int
+    offset: int
+    length: int  # full record length (header + key + payload)
+
+    def pack(self) -> bytes:
+        return struct.pack("<QQI", self.file_id, self.offset, self.length)
+
+    @classmethod
+    def unpack(cls, raw: bytes) -> "LogPointer":
+        f, o, l = struct.unpack_from("<QQI", raw)
+        return cls(f, o, l)
+
+PTR_BYTES = struct.calcsize("<QQI")
+
+
+class TensorLog:
+    def __init__(self, root: str, max_file_bytes: int = 64 * 1024 * 1024, fsync_writes: bool = False):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.max_file_bytes = max_file_bytes
+        self.fsync_writes = fsync_writes
+        self._files: Dict[int, dict] = {}  # id -> {size, live, path}
+        self._active_id = -1
+        self._active_f = None
+        self._recover()
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _path(self, file_id: int) -> str:
+        return os.path.join(self.root, f"vlog_{file_id:08d}.bin")
+
+    def _recover(self) -> None:
+        ids = []
+        for name in os.listdir(self.root):
+            if name.startswith("vlog_") and name.endswith(".bin"):
+                fid = int(name[5:-4])
+                ids.append(fid)
+                size = os.path.getsize(self._path(fid))
+                self._files[fid] = {"size": size, "live": size, "path": self._path(fid)}
+        self._active_id = max(ids) if ids else -1
+
+    def _open_active(self) -> None:
+        if self._active_f is None or self._files.get(self._active_id, {}).get("size", 0) >= self.max_file_bytes:
+            if self._active_f is not None:
+                self._active_f.close()
+            self._active_id += 1
+            self._files[self._active_id] = {"size": 0, "live": 0, "path": self._path(self._active_id)}
+            self._active_f = open(self._path(self._active_id), "ab")
+
+    @property
+    def file_count(self) -> int:
+        return len(self._files)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(f["size"] for f in self._files.values())
+
+    def garbage_ratio(self, file_id: int) -> float:
+        f = self._files[file_id]
+        return 1.0 - (f["live"] / f["size"]) if f["size"] else 0.0
+
+    def file_ids(self) -> List[int]:
+        return sorted(self._files)
+
+    # -- writes --------------------------------------------------------------
+    def append(self, key: bytes, payload: bytes) -> LogPointer:
+        return self.append_batch([(key, payload)])[0]
+
+    def append_batch(self, records: Sequence[Tuple[bytes, bytes]]) -> List[LogPointer]:
+        """Append records contiguously; one write syscall for the batch."""
+        self._open_active()
+        finfo = self._files[self._active_id]
+        base = finfo["size"]
+        buf = bytearray()
+        ptrs: List[LogPointer] = []
+        for key, payload in records:
+            body = key + payload
+            crc = zlib.crc32(body) & 0xFFFFFFFF
+            rec = _HDR.pack(crc, len(key), len(payload)) + body
+            ptrs.append(LogPointer(self._active_id, base + len(buf), len(rec)))
+            buf += rec
+        self._active_f.write(buf)
+        self._active_f.flush()  # readers use separate handles
+        if self.fsync_writes:
+            os.fsync(self._active_f.fileno())
+        finfo["size"] += len(buf)
+        finfo["live"] += len(buf)
+        return ptrs
+
+    def mark_dead(self, ptr: LogPointer) -> None:
+        f = self._files.get(ptr.file_id)
+        if f is not None:
+            f["live"] = max(0, f["live"] - ptr.length)
+
+    # -- reads ---------------------------------------------------------------
+    def read(self, ptr: LogPointer) -> Tuple[bytes, bytes]:
+        with open(self._path(ptr.file_id), "rb") as f:
+            f.seek(ptr.offset)
+            raw = f.read(ptr.length)
+        return self._parse(raw, ptr)
+
+    @staticmethod
+    def _parse(raw: bytes, ptr: LogPointer) -> Tuple[bytes, bytes]:
+        crc, klen, plen = _HDR.unpack_from(raw)
+        body = raw[_HDR.size : _HDR.size + klen + plen]
+        if zlib.crc32(body) & 0xFFFFFFFF != crc:
+            raise IOError(f"tensor-log CRC mismatch at {ptr}")
+        return body[:klen], body[klen:]
+
+    def read_batch(self, ptrs: Sequence[LogPointer]) -> List[Tuple[bytes, bytes]]:
+        """Coalescing batch read: pointers are grouped per file, sorted by
+        offset, and adjacent/overlapping ranges are fetched with a single
+        sequential read."""
+        by_file: Dict[int, List[Tuple[int, LogPointer]]] = {}
+        for i, p in enumerate(ptrs):
+            by_file.setdefault(p.file_id, []).append((i, p))
+        out: List = [None] * len(ptrs)
+        self.seq_reads = getattr(self, "seq_reads", 0)
+        for fid, lst in by_file.items():
+            lst.sort(key=lambda ip: ip[1].offset)
+            with open(self._path(fid), "rb") as f:
+                j = 0
+                while j < len(lst):
+                    # coalesce a contiguous-ish range (gap tolerance 64 KiB)
+                    start = lst[j][1].offset
+                    end = lst[j][1].offset + lst[j][1].length
+                    k = j + 1
+                    while k < len(lst) and lst[k][1].offset <= end + 65536:
+                        end = max(end, lst[k][1].offset + lst[k][1].length)
+                        k += 1
+                    f.seek(start)
+                    chunk = f.read(end - start)
+                    self.seq_reads += 1
+                    for idx, p in lst[j:k]:
+                        raw = chunk[p.offset - start : p.offset - start + p.length]
+                        out[idx] = self._parse(raw, p)
+                    j = k
+        return out
+
+    def scan_file(self, file_id: int) -> Iterator:
+        """Yield (ptr, key, payload) for every record in a file (merge/GC)."""
+        path = self._path(file_id)
+        size = os.path.getsize(path)
+        with open(path, "rb") as f:
+            off = 0
+            while off + _HDR.size <= size:
+                hdr = f.read(_HDR.size)
+                crc, klen, plen = _HDR.unpack_from(hdr)
+                body = f.read(klen + plen)
+                if len(body) < klen + plen:
+                    return
+                ptr = LogPointer(file_id, off, _HDR.size + klen + plen)
+                if zlib.crc32(body) & 0xFFFFFFFF == crc:
+                    yield ptr, body[:klen], body[klen:]
+                off += ptr.length
+
+    def remove_file(self, file_id: int) -> None:
+        if self._active_id == file_id and self._active_f is not None:
+            self._active_f.close()
+            self._active_f = None
+        try:
+            os.remove(self._path(file_id))
+        except OSError:
+            pass
+        self._files.pop(file_id, None)
+
+    def sync(self) -> None:
+        if self._active_f is not None:
+            self._active_f.flush()
+            os.fsync(self._active_f.fileno())
+
+    def close(self) -> None:
+        if self._active_f is not None:
+            self._active_f.close()
+            self._active_f = None

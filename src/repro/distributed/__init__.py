@@ -1,0 +1,2 @@
+"""Distribution layer: sharding rules (DP/FSDP/TP/EP/SP), gradient
+compression, and collective helpers."""

@@ -1,0 +1,91 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+The assignment's production mesh is 2-axis (data, model), so PP is not part
+of the default dry-run config; this module demonstrates the capability for
+larger deployments (DESIGN.md §5): layer blocks are sharded one-per-stage,
+microbatches stream through a ``ppermute`` ring inside ``shard_map``, and
+the schedule is the standard (n_micro + n_stages - 1)-step fill/drain.
+
+All stages execute every step (SPMD); bubble steps compute on zeros and
+their results are masked out — the classic JAX pipeline formulation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable,
+    mesh: Mesh,
+    axis: str = "stage",
+):
+    """Build a pipelined apply: ``f(stage_params, xs) -> ys``.
+
+    stage_fn(params_one_stage, x) -> y   (same shape as x)
+    stage_params: pytree with leading [n_stages] dim on every leaf
+    xs: (n_micro, mb, ...) microbatches; ys: same shape, after all stages.
+    """
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def spmd(params, xs):
+        # params: this stage's slice, leading dim 1; xs fully replicated
+        local = jax.tree.map(lambda p: p[0], params)
+        idx = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        steps = n_micro + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def step(t, carry):
+            buf, outs = carry
+            # stage 0 consumes microbatch t (zeros once drained)
+            feed_idx = jnp.clip(t, 0, n_micro - 1)
+            x0 = jax.lax.dynamic_index_in_dim(xs, feed_idx, 0, keepdims=False)
+            x0 = jnp.where(t < n_micro, x0, jnp.zeros_like(x0))
+            x_in = jnp.where(idx == 0, x0, buf)
+            y = stage_fn(local, x_in)
+            # last stage emits microbatch t - (n_stages - 1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            emit = (idx == n_stages - 1) & (t >= n_stages - 1)
+            cur = jax.lax.dynamic_index_in_dim(outs, out_idx, 0, keepdims=False)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(emit, y, cur), out_idx, 0
+            )
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outs
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        _, outs = jax.lax.fori_loop(0, steps, step, (buf0, outs0))
+        # outputs accumulated on the last stage only; broadcast via psum of
+        # the masked buffers (zeros elsewhere)
+        outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    fn = shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn
+
+
+def pipeline_stage_params(params_stacked, n_stages: int):
+    """Validate a [L, ...]-stacked block tree splits evenly into stages and
+    reshape to [n_stages, L/n_stages, ...] (stage-major)."""
+
+    def leaf(p):
+        L = p.shape[0]
+        assert L % n_stages == 0, f"layers {L} % stages {n_stages} != 0"
+        return p.reshape(n_stages, L // n_stages, *p.shape[1:])
+
+    return jax.tree.map(leaf, params_stacked)

@@ -1,0 +1,249 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for every
+architecture family, mesh-shape agnostic.
+
+Strategy (DESIGN.md §5):
+  * TP over ``model``: attention heads, ffn hidden, expert dim, vocab.
+  * ZeRO-3/FSDP over ``data`` (and ``pod`` when present for the largest
+    archs): the non-TP matrix dim of every weight; optimizer moments
+    inherit the parameter spec exactly.
+  * Batch over ``(pod, data)``.
+  * Decode KV caches: heads over ``model`` when divisible, else the KV
+    sequence axis over ``model`` (flash-decoding style partial softmax).
+
+Rules are matched on the parameter's tree path (joined with '/'), longest
+match wins; every spec is filtered against the live mesh's axis names so the
+same rules serve the 1-pod (data, model) and 2-pod (pod, data, model)
+meshes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+BATCH = ("pod", "data")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def filter_spec(spec: P, mesh: Mesh, shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Drop axis names the mesh lacks; drop axes that don't divide the dim."""
+    names = set(mesh.axis_names)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        parts = entry if isinstance(entry, (tuple, list)) else (entry,)
+        kept = [a for a in parts if a in names]
+        if shape is not None and kept:
+            # keep the largest prefix of axes whose product divides the dim
+            prod = 1
+            ok = []
+            for a in kept:
+                prod *= _axis_size(mesh, a)
+                if shape[i] % prod == 0:
+                    ok.append(a)
+                else:
+                    prod //= _axis_size(mesh, a)
+            kept = ok
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+# --------------------------------------------------------------- param rules
+# (regex on 'path', ndim-adjusted PartitionSpec builder). Specs are written
+# for the UNSTACKED parameter; a leading layer-stack axis is auto-prepended.
+# "fsdp" is substituted with the configured ZeRO axis set.
+
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    # embeddings: vocab over model, d_model over fsdp
+    (r"(^|/)embed$", ("model", "fsdp")),
+    (r"(^|/)lm_head$", ("fsdp", "model")),
+    # MoE experts (E, D, F) / (E, F, D): expert dim over model (EP)
+    (r"moe/w_(gate|up)$", ("model", "fsdp", None)),
+    (r"moe/w_down$", ("model", None, "fsdp")),
+    (r"moe/router$", (None, None)),
+    # MLA: latent ranks are small; shard the head-expanded dim over model
+    (r"wq_a$", ("fsdp", None)),
+    (r"wq_b$", ("fsdp", "model")),
+    (r"wkv_a$", ("fsdp", None)),
+    (r"w[kv]_b$", (None, "model")),
+    # attention in-projections: heads over model
+    (r"(attn|self_attn|cross)/w[qkv]$", ("fsdp", "model")),
+    (r"(attn|self_attn|cross)/wo$", ("model", "fsdp")),
+    (r"(^|/)wo$", ("model", "fsdp")),
+    (r"b[qkv]$", ("model",)),
+    # MLP: hidden over model
+    (r"mlp/w_(gate|up)$", ("fsdp", "model")),
+    (r"mlp/w_down$", ("model", "fsdp")),
+    # RWKV6 time-mix: square (D,D) — out dim over model; wo back
+    (r"time/w[rkvg]$", ("fsdp", "model")),
+    (r"time/lora_a$", (None, "fsdp", None)),
+    (r"time/lora_b$", (None, None, "fsdp")),
+    # RWKV6 channel-mix
+    (r"chan/wk$", ("fsdp", "model")),
+    (r"chan/wv$", ("model", "fsdp")),
+    (r"chan/wr$", ("fsdp", "model")),
+    # Mamba2: inner dim over model
+    (r"mamba/w_in$", ("fsdp", "model")),
+    (r"mamba/w_out$", ("model", "fsdp")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/conv_b$", ("model",)),
+    (r"mamba/norm_w$", ("model",)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec_for(path_str: str, ndim: int, stacked: bool, fsdp_axes: Tuple[str, ...]) -> P:
+    def expand(entry):
+        if entry == "fsdp":
+            return fsdp_axes if len(fsdp_axes) != 1 else fsdp_axes[0]
+        return entry
+
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            body = tuple(expand(e) for e in spec)
+            if stacked and len(body) == ndim - 1:
+                return P(None, *body)
+            if len(body) == ndim:
+                return P(*body)
+            # rank mismatch (e.g. bias rules vs stacked): pad on the left
+            if len(body) < ndim:
+                return P(*((None,) * (ndim - len(body)) + body))
+    return P()  # replicated (norms, scalars, small tables)
+
+
+def param_shardings(mesh: Mesh, param_specs, fsdp_axes: Tuple[str, ...] = ("data",)):
+    """ShapeDtypeStruct (or array) tree -> NamedSharding tree."""
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        stacked = "blocks" in ps or "enc_blocks" in ps or "dec_blocks" in ps
+        spec = param_spec_for(ps, len(x.shape), stacked, fsdp_axes)
+        spec = filter_spec(spec, mesh, x.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, param_specs)
+
+
+def opt_state_shardings(mesh: Mesh, opt_specs, p_shardings):
+    """Optimizer state inherits parameter sharding (ZeRO: moments are
+    sharded exactly like their parameter); factored-v stats get the
+    parameter spec minus the factored-out dim; step is replicated."""
+
+    def _param_sharding(ppath):
+        sub = p_shardings
+        for k in ppath:
+            sub = sub[k.key if hasattr(k, "key") else k.idx]
+        return sub
+
+    m_shardings = jax.tree_util.tree_map_with_path(
+        lambda path, x: _param_sharding(path), opt_specs["m"]
+    )
+
+    def v_leaf(path, x):
+        psh = _param_sharding(path[:-1])
+        entries = list(psh.spec) + [None] * (len(x.shape) + 1 - len(psh.spec))
+        kind = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if kind == "v":
+            return psh
+        if kind == "vr":  # param spec minus last dim
+            return NamedSharding(mesh, filter_spec(P(*entries[: len(x.shape)]), mesh, x.shape))
+        # vc: param spec minus second-to-last dim
+        spec = P(*(entries[: len(x.shape) - 1] + [entries[len(x.shape)]]))
+        return NamedSharding(mesh, filter_spec(spec, mesh, x.shape))
+
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": m_shardings,
+        "v": jax.tree_util.tree_map_with_path(v_leaf, opt_specs["v"]),
+    }
+
+
+# --------------------------------------------------------------- batch/cache
+def batch_shardings(mesh: Mesh, specs):
+    def leaf(x):
+        spec = P(BATCH) if len(x.shape) >= 1 else P()
+        return NamedSharding(mesh, filter_spec(spec, mesh, x.shape))
+
+    return jax.tree.map(leaf, specs)
+
+
+_ATTN_CACHE = {"k", "v", "attn_k", "attn_v", "self_k", "self_v", "cross_k", "cross_v"}
+
+
+def cache_shardings(mesh: Mesh, cache_specs, cfg):
+    """KV/state cache sharding for decode, dispatched on the leaf name:
+
+      k/v-style      (L, B, S, KVH, Dh) — batch over (pod,data); heads over
+                     model when divisible, else the KV sequence axis
+                     (flash-decoding partial softmax)
+      c / kr (MLA)   (L, B, S, r)       — batch + sequence over model
+      wkv / ssm      (L, B, H, ...)     — batch + heads over model
+      *_shift        (L, B, D)          — batch + channels over model
+      conv           (L, B, K-1, C)     — batch + channels over model
+    """
+    model = _axis_size(mesh, "model")
+
+    def leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        spec, check_shape = cache_spec_for(name, x.shape, model)
+        return NamedSharding(mesh, filter_spec(spec, mesh, check_shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_specs)
+
+
+def cache_spec_for(name: str, shape, model: int):
+    """Pure rule: (leaf name, shape, TP degree) -> (PartitionSpec,
+    shape-to-check-divisibility-or-None)."""
+    nd = len(shape)
+    check_shape = shape  # filter axes that don't divide, unless uneven is intended
+    entries = [None] * nd
+    if nd >= 2:
+        entries[1] = BATCH
+    if True:
+        if name in _ATTN_CACHE and nd == 5:
+            # Never shard the cache SEQ axis: writing one token at a traced
+            # position into a seq-sharded cache lowers to a masked
+            # full-buffer rewrite per layer (GSPMD "involuntary full
+            # rematerialization") — it dominated the decode memory term
+            # (EXPERIMENTS §Perf).  Prefer KV heads; when they don't divide
+            # the TP degree, shard the head-dim instead (the q·k contraction
+            # all-reduces one small score chunk, and the update stays local).
+            if shape[3] % model == 0 and model > 1:
+                entries[3] = "model"
+            elif shape[4] % model == 0 and model > 1:
+                entries[4] = "model"  # head-dim sharding (contraction axis)
+            else:
+                entries[2] = "model"  # sequence-parallel decode (last resort)
+        elif name in ("c", "kr") and nd == 4:
+            # same seq-DUS hazard as k/v: prefer the latent dim
+            if shape[3] % model == 0 and model > 1:
+                entries[3] = "model"
+            else:
+                entries[2] = "model"
+        elif name in ("wkv", "ssm") and nd == 5:
+            entries[2] = "model"
+        elif name in ("time_shift", "chan_shift") and nd == 3:
+            entries[2] = "model"
+        elif name == "conv" and nd == 4:
+            entries[3] = "model"
+    return P(*entries), check_shape

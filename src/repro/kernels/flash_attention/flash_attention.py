@@ -1,0 +1,94 @@
+"""Blocked causal flash attention for TPU (Pallas).
+
+Grid ``(B, H, n_q, n_k)`` with the KV dimension innermost/sequential; the
+online-softmax running state (m, l, acc) lives in VMEM scratch and is
+carried across KV blocks.  Block shapes are MXU-aligned (multiples of 128
+on the matmul dims); fully-masked KV blocks are skipped (causal schedule),
+halving work for square prefills.  GQA is handled in the k/v index_map
+(``h -> h // group``) — no KV replication in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale, causal, q_offset, block_q, block_k):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+        acc[...] = jnp.zeros_like(acc)
+
+    q_start = q_offset + pl.program_id(2) * block_q
+    k_start = ik * block_k
+    # causal block skip: block computes only if some key is visible
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l[...] = l[...] * corr + p.sum(axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q, k, v, *, causal: bool = True, q_offset: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q (B, H, Sq, D); k/v (B, KVH, Skv, D).  Sq/Skv must be multiples of
+    the block sizes (ops.py pads)."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    grid = (B, H, Sq // block_q, Skv // block_k)
+    kern = functools.partial(
+        _kernel, scale=D**-0.5, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""jit-ready wrapper: layout handling, padding to block multiples, GQA."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, q_offset: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q (B, Sq, H, D); k/v (B, Skv, KVH, D) — model layout.  Pads sequence
+    dims to block multiples (keys padded at the tail are masked by causality
+    when q_offset + Sq == Skv; for non-causal use explicit Skv multiple)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    if not causal and pad_k:
+        raise ValueError("non-causal flash requires Skv % block_k == 0 (pad keys are unmaskable)")
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, q_offset=q_offset,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    out = out[:, :, :Sq, :]
+    return jnp.moveaxis(out, 2, 1)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    """q (B, H, Sq, D); k/v (B, KVH, Skv, D); GQA via head grouping.
+    Query i sits at absolute position q_offset + i; key j at position j."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * (D**-0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel for the paper's batch codec (§3.4): per-channel
+symmetric int8 quantization of KV-cache blocks before they are DMA'd to the
+host / tensor log, and the matching dequantization on load.
+
+Layout: blocks arrive flattened to (T, C) — T = tokens x heads rows,
+C = channels (the quantization axis, matching the host codec).  Grid is 1-D
+over C tiles; each program reads a (T, bc) tile resident in VMEM, reduces
+absmax over rows (VPU), and emits the int8 tile plus the (1, bc) scale row.
+C tiles are lane-aligned (128); T is the sublane dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (T, bc)
+    absmax = jnp.max(jnp.abs(x), axis=0, keepdims=True)  # (1, bc)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...]).astype(o_ref.dtype)
+
+
+def quantize_kernel(x, *, block_c: int = 512, interpret: bool = False):
+    """x (T, C) -> (q int8 (T, C), scale f32 (1, C)).  C % block_c == 0."""
+    T, C = x.shape
+    grid = (C // block_c,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((T, block_c), lambda c: (0, c))],
+        out_specs=[
+            pl.BlockSpec((T, block_c), lambda c: (0, c)),
+            pl.BlockSpec((1, block_c), lambda c: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, C), jnp.int8),
+            jax.ShapeDtypeStruct((1, C), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_kernel(q, scale, *, out_dtype=jnp.bfloat16, block_c: int = 512, interpret: bool = False):
+    """q (T, C) int8, scale (1, C) f32 -> x (T, C) out_dtype."""
+    T, C = q.shape
+    grid = (C // block_c,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, block_c), lambda c: (0, c)),
+            pl.BlockSpec((1, block_c), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((T, block_c), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((T, C), out_dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, scale)

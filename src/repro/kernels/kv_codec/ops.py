@@ -1,0 +1,49 @@
+"""jit wrappers: arbitrary (..., C) tensors, channel padding to the lane
+multiple, scale layout matching the host codec."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kv_codec import dequantize_kernel, quantize_kernel
+from .ref import dequantize_ref, quantize_ref
+
+
+def _plan(C: int, block_c: int):
+    """Pad C up to a lane multiple and pick a dividing block size."""
+    Cp = -(-C // 128) * 128
+    bc = block_c if Cp % block_c == 0 else 128
+    return Cp, bc
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def quantize(x, *, block_c: int = 512, interpret: bool = False):
+    """x (..., C) -> (q int8 (..., C), scale f32 (C,))."""
+    shape = x.shape
+    C = shape[-1]
+    Cp, bc = _plan(C, block_c)
+    xf = x.reshape(-1, C)
+    if Cp != C:
+        xf = jnp.pad(xf, ((0, 0), (0, Cp - C)))
+    q, s = quantize_kernel(xf, block_c=bc, interpret=interpret)
+    return q[:, :C].reshape(shape), s[0, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block_c", "interpret"))
+def dequantize(q, scale, *, out_dtype=jnp.bfloat16, block_c: int = 512, interpret: bool = False):
+    shape = q.shape
+    C = shape[-1]
+    Cp, bc = _plan(C, block_c)
+    qf = q.reshape(-1, C)
+    sf = scale.reshape(1, C).astype(jnp.float32)
+    if Cp != C:
+        qf = jnp.pad(qf, ((0, 0), (0, Cp - C)))
+        sf = jnp.pad(sf, ((0, 0), (0, Cp - C)), constant_values=1.0)
+    x = dequantize_kernel(qf, sf, out_dtype=out_dtype, block_c=bc, interpret=interpret)
+    return x[:, :C].reshape(shape)
+
+
+__all__ = ["quantize", "dequantize", "quantize_ref", "dequantize_ref"]

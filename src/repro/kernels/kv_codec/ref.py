@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the batch KV codec (per-channel symmetric int8).
+
+Bit-identical to the host-side ``repro.core.codec.quantize_int8`` on the
+same input (same scale rule: absmax/127 over all leading axes, scale 1.0
+where a channel is all-zero).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x (..., C) -> (q int8 (..., C), scale f32 (C,))."""
+    xf = x.astype(jnp.float32)
+    red = tuple(range(xf.ndim - 1))
+    absmax = jnp.max(jnp.abs(xf), axis=red)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

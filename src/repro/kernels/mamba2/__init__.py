@@ -1,0 +1,1 @@
+from .ops import ssd, ssd_ref  # noqa: F401

@@ -1,0 +1,101 @@
+"""Chunked Mamba-2 SSD scan for TPU (Pallas).
+
+Same TPU adaptation as the RWKV6 kernel: the per-(batch, head) SSM state
+(P x N, f32) lives in VMEM scratch across the whole sequence; chunks
+stream through sequentially and intra-chunk work is MXU matmuls
+(the Mamba-2 paper's own chunked decomposition, §6):
+
+    cum_t   = sum_{j<=t} log a_j                 (within chunk)
+    y_intra = (C Bᵀ ∘ exp(cum_t - cum_j) ∘ dt_j, j<=t) X
+    y_inter = exp(cum_t) * (C Sᵀ)
+    S'      = exp(cum_C) S + Xᵀ (dt ∘ exp(cum_C - cum)) B
+
+Per-head decay is a scalar, so the log-difference is formed before exp and
+the kept entries have exponent <= 0 — exact, no clamp needed (masked
+entries get -inf pre-exp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, a_ref, dt_ref, s0_ref, y_ref, sT_ref, s_scratch, *, chunk):
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = s0_ref[0, 0]
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (C, P)
+    bm = b_ref[0].astype(jnp.float32)  # (C, N)
+    cm = c_ref[0].astype(jnp.float32)  # (C, N)
+    a = a_ref[0, :, 0].astype(jnp.float32)  # (C,)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (C,)
+    S = s_scratch[...]  # (P, N)
+    C = x.shape[0]
+
+    loga = jnp.log(jnp.maximum(a, 1e-38))
+    cum = jnp.cumsum(loga)  # (C,)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    delta = cum[:, None] - cum[None, :]
+    L = jnp.exp(jnp.where(ti >= tj, delta, -jnp.inf))  # (C, C), incl diag
+
+    G = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (C, C)
+    W = G * L * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())))  # intra (C, P)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, S, (((1,), (1,)), ((), ()))
+    )  # inter: C·Sᵀ -> (C, P)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_rem = jnp.exp(cum[C - 1] - cum) * dt  # (C,)
+    S_new = jnp.exp(cum[C - 1]) * S + jax.lax.dot_general(
+        x * decay_rem[:, None], bm, (((0,), (0,)), ((), ()))
+    )
+    s_scratch[...] = S_new
+
+    @pl.when(i == ni - 1)
+    def _final():
+        sT_ref[0, 0] = S_new
+
+
+def ssd_kernel(x, Bm, Cm, a, dt, state, *, chunk: int = 64, interpret: bool = False):
+    """x (B,S,H,P); Bm/Cm (B,S,N); a/dt (B,S,H); state (B,H,P,N) f32.
+    S % chunk == 0 (ops.py pads).  Returns (y (B,S,H,P) f32, state')."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H, S // chunk)
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, i: (b, i, h)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, i: (b, i, h)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, Bm, Cm, a, dt, state)

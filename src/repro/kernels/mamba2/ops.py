@@ -1,0 +1,32 @@
+"""jit wrapper: sequence padding (pad steps use a=1, dt=0 — exact no-ops
+on the state), layout handling."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mamba2 import ssd_kernel
+from .ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, Bm, Cm, a, dt, state, *, chunk: int = 64, interpret: bool = False):
+    """x (B,S,H,P); Bm/Cm (B,S,N); a/dt (B,S,H); state (B,H,P,N) f32.
+    Returns (y (B,S,H,P) f32, new_state)."""
+    B, S, H, P = x.shape
+    c = min(chunk, S) if S % min(chunk, S) == 0 else chunk
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, s = ssd_kernel(x, Bm, Cm, a, dt, state, chunk=c, interpret=interpret)
+    return y[:, :S], s
+
+
+__all__ = ["ssd", "ssd_ref"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence — identical math to
+``repro.models.ssm.mamba2_mix``'s sequential step:
+
+    S_t = a_t S_{t-1} + dt_t (x_t ⊗ B_t)
+    y_t = C_t · S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ssd_ref(x, Bm, Cm, a, dt, state):
+    """x (B,S,H,P); Bm/Cm (B,S,N); a/dt (B,S,H); state (B,H,P,N) f32.
+    Returns (y (B,S,H,P) f32, new_state (B,H,P,N) f32)."""
+
+    def step(s, inp):
+        xt, bt, ct, at, dtt = inp  # (B,H,P),(B,N),(B,N),(B,H),(B,H)
+        upd = dtt[..., None, None] * (xt[..., :, None] * bt[:, None, None, :])
+        s_new = at[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s_new, ct)
+        return s_new, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(F32),
+        Bm.transpose(1, 0, 2).astype(F32),
+        Cm.transpose(1, 0, 2).astype(F32),
+        a.transpose(1, 0, 2).astype(F32),
+        dt.transpose(1, 0, 2).astype(F32),
+    )
+    s_new, ys = jax.lax.scan(step, state.astype(F32), xs)
+    return ys.transpose(1, 0, 2, 3), s_new

@@ -1,0 +1,1 @@
+from .ops import wkv, wkv_ref  # noqa: F401

@@ -1,0 +1,32 @@
+"""jit wrapper: sequence padding (pad steps use decay w=1, k=0 so they are
+exact no-ops on the state), layout handling."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import wkv_ref
+from .rwkv6 import wkv_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, state, *, chunk: int = 32, interpret: bool = False):
+    """r/k/v/w (B, H, S, N); u (H, N); state (B, H, N, N) f32.
+    Returns (y (B, H, S, N) f32, new_state (B, H, N, N) f32)."""
+    B, H, S, N = r.shape
+    c = min(chunk, S) if S % min(chunk, S) == 0 else chunk
+    pad = (-S) % c
+    if pad:
+        zpad = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, zpad)
+        k = jnp.pad(k, zpad)  # k=0 -> no state update from pad steps
+        v = jnp.pad(v, zpad)
+        w = jnp.pad(w, zpad, constant_values=1.0)  # w=1 -> no decay
+    y, s = wkv_kernel(r, k, v, w, u, state, chunk=c, interpret=interpret)
+    return y[:, :, :S, :], s
+
+
+__all__ = ["wkv", "wkv_ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence — identical math to
+``repro.models.ssm.rwkv6_time_mix``'s inner scan.
+
+    y_t   = r_t · (S_{t-1} + (u ∘ k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """r/k/v/w (B, H, S, N); u (H, N); state (B, H, N, N) f32.
+    Returns (y (B, H, S, N) f32, new_state (B, H, N, N) f32)."""
+    B, H, S, N = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, N, N)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(t.transpose(2, 0, 1, 3).astype(F32) for t in (r, k, v, w))
+    s_new, ys = jax.lax.scan(step, state.astype(F32), xs)
+    return ys.transpose(1, 2, 0, 3), s_new

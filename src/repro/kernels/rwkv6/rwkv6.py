@@ -1,0 +1,110 @@
+"""Chunked RWKV6 WKV scan for TPU (Pallas).
+
+TPU adaptation of the CUDA WKV kernel: the per-(batch, head) recurrent
+state S (N x N, f32) lives in VMEM scratch for the *entire* sequence — the
+grid iterates chunks sequentially per (b, h), so S never round-trips HBM
+between tokens (the XLA scan moves B*H*N*N*4 bytes of state per token;
+this kernel moves only r/k/v/w in and y out).
+
+Inside a chunk the recurrence is evaluated in closed form with MXU matmuls
+(FLA-style intra-chunk decomposition) rather than a token loop:
+
+    cum_t = prod_{j<=t} w_j            (cumulative decay within the chunk)
+    inter: y_t += (r_t ∘ cum_{t-1}) S_0
+    intra: y_t += sum_{j<t} [ (r_t ∘ cum_{t-1}/cum_j) · k_j ] v_j
+         + diag:  (r_t · (u ∘ k_t)) v_t
+    S_new = diag(cum_C) S_0 + sum_j ((cum_C/cum_j) ∘ k_j) v_j^T
+
+Decay ratios cum_{t-1}/cum_j (j < t) are always <= 1; the inverse factors
+k_j/cum_j are bounded by the chunk length (default 32), keeping f32 safe —
+same trade-off FLA makes on GPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scratch, *, chunk):
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = s0_ref[0, 0]
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (C, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (1, N) -> broadcast
+    S = s_scratch[...]  # (N, N)
+    C, N = r.shape
+
+    # clamp the per-token log-decay so exp(-cum) stays finite in f32 within
+    # a chunk (a channel decaying below e^-80/chunk has forgotten its state
+    # to sub-f32 resolution anyway) — same rule as models.ssm.wkv_chunked
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), -80.0 / C)
+    cum = jnp.cumsum(logw, axis=0)  # log cum_t, (C, N)
+    cum_prev = cum - logw  # log cum_{t-1}
+    r_decay = r * jnp.exp(cum_prev)  # r_t ∘ cum_{t-1}
+    k_scaled = k * jnp.exp(-cum)  # k_j / cum_j
+
+    # inter-chunk: contribution of the carried state
+    y = jax.lax.dot_general(r_decay, S, (((1,), (0,)), ((), ())))  # (C, N)
+
+    # intra-chunk: strictly-lower-triangular attention + u-weighted diagonal
+    A = jax.lax.dot_general(r_decay, k_scaled, (((1,), (1,)), ((), ())))  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(tj < ti, A, 0.0)
+    diag = jnp.sum(r * u * k, axis=1)  # (C,)
+    y = y + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())))
+    y = y + diag[:, None] * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S_new = diag(cum_C) S + (k ∘ cum_C/cum)ᵀ v
+    cum_C = cum[C - 1 : C, :]  # (1, N) log total decay
+    k_rem = k * jnp.exp(cum_C - cum)  # (C, N)
+    S_new = jnp.exp(cum_C).T * S + jax.lax.dot_general(
+        k_rem, v, (((0,), (0,)), ((), ()))
+    )
+    s_scratch[...] = S_new
+
+    @pl.when(i == ni - 1)
+    def _final():
+        sT_ref[0, 0] = S_new
+
+
+def wkv_kernel(r, k, v, w, u, state, *, chunk: int = 32, interpret: bool = False):
+    """r/k/v/w (B, H, S, N); u (H, N); state (B, H, N, N) f32.
+    S % chunk == 0 (ops.py pads).  Returns (y (B,H,S,N) f32, state')."""
+    B, H, S, N = r.shape
+    grid = (B, H, S // chunk)
+    kern = functools.partial(_kernel, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, 1, chunk, N), lambda b, h, i: (b, h, i, 0))
+    state_spec = pl.BlockSpec((1, 1, N, N), lambda b, h, i: (b, h, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, i: (h, 0)),
+            state_spec,
+        ],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u, state)

@@ -1,0 +1,34 @@
+"""Production mesh construction (assignment spec).
+
+``make_production_mesh`` is a function (never module-level state) so that
+importing this module never touches jax device state.  The 1-pod mesh is
+(data=16, model=16) = 256 chips; the 2-pod mesh prepends a pure-DP ``pod``
+axis = 512 chips.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"), axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+# TPU v5e hardware constants used by the roofline analysis (assignment spec)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

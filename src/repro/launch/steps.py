@@ -1,0 +1,155 @@
+"""Step builders: one jitted (train | prefill | decode) step per
+(architecture x shape), with in/out shardings resolved from
+``repro.distributed.sharding`` for whatever mesh is active.
+
+These are the exact callables the dry-run lowers and the train/serve
+launchers execute; there is no separate "dry-run model".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed import sharding as shd
+from ..models import api
+from ..training import optim
+
+# archs big enough that ZeRO-3 must span the pod axis too (1T params)
+FSDP_POD_ARCHS = {"kimi-k2-1t-a32b"}
+
+
+def fsdp_axes_for(cfg: ModelConfig, mesh) -> Tuple[str, ...]:
+    if cfg.name.split("-smoke")[0] in FSDP_POD_ARCHS and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def opt_config_for(cfg: ModelConfig) -> optim.OptimizerConfig:
+    """1T-class archs get bf16 first moment + factored second moment
+    (fp32 AdamW state alone would be 8 TB)."""
+    big = cfg.param_count() > 50e9
+    return optim.OptimizerConfig(
+        moment_dtype="bfloat16" if big else "float32",
+        factored_second_moment=big,
+    )
+
+
+def _train_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, remat=True, seq_shard=True)
+
+
+# ------------------------------------------------------------------ train
+def build_train_step(cfg: ModelConfig, ocfg: Optional[optim.OptimizerConfig] = None):
+    cfg = _train_cfg(cfg)
+    ocfg = ocfg or opt_config_for(cfg)
+    lfn = api.loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(lfn, has_aux=True)(params, batch)
+        params, opt_state, om = optim.apply_updates(ocfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step, ocfg
+
+
+def train_abstract_inputs(cfg: ModelConfig, shape: ShapeConfig, ocfg: optim.OptimizerConfig):
+    p_specs = api.param_specs(cfg)
+    return p_specs, optim.state_specs(ocfg, p_specs), api.input_specs(cfg, shape)
+
+
+def train_shardings(mesh, cfg: ModelConfig, shape: ShapeConfig, ocfg: optim.OptimizerConfig):
+    fsdp = fsdp_axes_for(cfg, mesh)
+    p_specs, o_specs, in_specs = train_abstract_inputs(cfg, shape, ocfg)
+    p_sh = shd.param_shardings(mesh, p_specs, fsdp)
+    o_sh = shd.opt_state_shardings(mesh, o_specs, p_sh)
+    b_sh = shd.batch_shardings(mesh, in_specs)
+    metrics_sh = None  # let XLA choose (scalars)
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh)
+
+
+# ---------------------------------------------------------------- prefill
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig):
+    pfn = api.prefill_fn(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, inputs):
+        cache = api.init_cache(cfg, B, S)
+        logits, cache = pfn(params, inputs, cache, 0)
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def prefill_shardings(mesh, cfg: ModelConfig, shape: ShapeConfig):
+    fsdp = fsdp_axes_for(cfg, mesh)
+    p_sh = shd.param_shardings(mesh, api.param_specs(cfg), fsdp)
+    in_sh = shd.batch_shardings(mesh, api.input_specs(cfg, shape))
+    c_specs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = shd.cache_shardings(mesh, c_specs, cfg)
+    logits_sh = NamedSharding(
+        mesh,
+        shd.filter_spec(P(shd.BATCH, "model"), mesh, (shape.global_batch, cfg.vocab_size)),
+    )
+    return (p_sh, in_sh), (logits_sh, c_sh)
+
+
+# ----------------------------------------------------------------- decode
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig):
+    dfn = api.decode_fn(cfg)
+
+    def decode_step(params, tokens, cache, pos):
+        logits, cache = dfn(params, tokens, cache, pos)
+        return logits[:, -1, :], cache
+
+    return decode_step
+
+
+def decode_shardings(mesh, cfg: ModelConfig, shape: ShapeConfig):
+    fsdp = fsdp_axes_for(cfg, mesh)
+    p_sh = shd.param_shardings(mesh, api.param_specs(cfg), fsdp)
+    specs = api.input_specs(cfg, shape)
+    tok_sh = shd.batch_shardings(mesh, specs["tokens"])
+    c_sh = shd.cache_shardings(mesh, specs["cache"], cfg)
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(
+        mesh,
+        shd.filter_spec(P(shd.BATCH, "model"), mesh, (shape.global_batch, cfg.vocab_size)),
+    )
+    return (p_sh, tok_sh, c_sh, pos_sh), (logits_sh, c_sh)
+
+
+# ------------------------------------------------------------- cell lowering
+def lower_cell(mesh, cfg: ModelConfig, shape: ShapeConfig):
+    """Lower one (arch x shape) cell under ``mesh``.  Returns the jax
+    ``Lowered`` object; callers .compile() it."""
+    with mesh:
+        if shape.kind == "train":
+            step, ocfg = build_train_step(cfg)
+            in_sh, out_sh = train_shardings(mesh, _train_cfg(cfg), shape, ocfg)
+            p, o, b = train_abstract_inputs(_train_cfg(cfg), shape, ocfg)
+            jitted = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1)
+            )
+            return jitted.lower(p, o, b)
+        if shape.kind == "prefill":
+            step = build_prefill_step(cfg, shape)
+            in_sh, out_sh = prefill_shardings(mesh, cfg, shape)
+            p = api.param_specs(cfg)
+            inputs = api.input_specs(cfg, shape)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            return jitted.lower(p, inputs)
+        # decode
+        step = build_decode_step(cfg, shape)
+        in_sh, out_sh = decode_shardings(mesh, cfg, shape)
+        p = api.param_specs(cfg)
+        specs = api.input_specs(cfg, shape)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(2,))
+        return jitted.lower(p, specs["tokens"], specs["cache"], pos)

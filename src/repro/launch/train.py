@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this container the full configs cannot execute (CPU, 1 core), so the
+default is the reduced smoke config on a small host-device mesh — the same
+code path (sharded params, jit train step, checkpoint/auto-resume) the
+production mesh uses; the full config is exercised by dryrun.py.
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # small host mesh for the smoke launcher
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--model", type=int, default=2)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback DP gradient compression")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import api
+    from repro.training import optim
+    from repro.training.loop import TrainConfig, train
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_smoke_mesh(args.data, args.model)
+    print(f"[launch.train] arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    with mesh:
+        p_specs = api.param_specs(cfg)
+        p_sh = shd.param_shardings(mesh, p_specs)
+        o_sh = None  # inherited via init under mesh
+        t0 = time.time()
+        res = train(
+            cfg,
+            TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
+        )
+        print(f"[launch.train] {res['step']} steps in {time.time()-t0:.1f}s; "
+              f"final loss {res['losses'][-1]:.4f} (resumed from {res['resumed_from']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+from .api import (
+    cache_specs,
+    decode_fn,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    param_specs,
+    prefill_fn,
+)
+from .common import count_params
+
+__all__ = [
+    "param_specs",
+    "init_params",
+    "cache_specs",
+    "init_cache",
+    "loss_fn",
+    "prefill_fn",
+    "decode_fn",
+    "input_specs",
+    "count_params",
+]

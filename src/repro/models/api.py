@@ -1,0 +1,112 @@
+"""Unified model API: every assigned architecture exposes the same five
+entry points, dispatched on ``cfg.family``:
+
+  param_specs(cfg)                  abstract params (dry-run)
+  init_params(cfg, key)             materialized params (smoke/train)
+  loss_fn(cfg)(params, batch)       training loss
+  prefill_fn(cfg)(params, inputs, cache, pos)  -> (logits, cache)
+  decode_fn(cfg)(params, tokens, cache, pos)   -> (logits, cache)
+
+plus ``input_specs(cfg, shape)`` producing the exact ShapeDtypeStruct
+stand-ins each (arch x shape) dry-run cell lowers with.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.encdec_param_specs(cfg)
+    return transformer.lm_param_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return encdec.encdec_init(cfg, key)
+    return transformer.lm_init(cfg, key)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.family == "encdec":
+        return encdec.encdec_cache_specs(cfg, batch, max_seq)
+    return transformer.cache_specs(cfg, batch, max_seq)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.family == "encdec":
+        return encdec.encdec_init_cache(cfg, batch, max_seq)
+    return transformer.init_cache(cfg, batch, max_seq)
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return lambda params, batch: encdec.encdec_loss(params, cfg, batch)
+    return lambda params, batch: transformer.lm_loss(params, cfg, batch)
+
+
+def prefill_fn(cfg: ModelConfig):
+    """(params, inputs, cache, pos) -> (logits, cache).  ``inputs`` is the
+    batch dict: tokens (+ frames for encdec)."""
+    if cfg.family == "encdec":
+
+        def prefill(params, inputs, cache, pos=0):
+            memory = encdec.encode(params, cfg, inputs["frames"])
+            return encdec.decode_forward(params, cfg, inputs["tokens"], memory=memory, pos=pos, cache=cache)
+
+        return prefill
+
+    def prefill(params, inputs, cache, pos=0):
+        logits, new_cache, _ = transformer.lm_forward(params, cfg, inputs["tokens"], pos=pos, cache=cache)
+        return logits, new_cache
+
+    return prefill
+
+
+def decode_fn(cfg: ModelConfig):
+    """(params, tokens (B,1), cache, pos) -> (logits (B,1,V), cache)."""
+    if cfg.family == "encdec":
+
+        def decode(params, tokens, cache, pos):
+            return encdec.decode_forward(params, cfg, tokens, memory=None, pos=pos, cache=cache)
+
+        return decode
+
+    def decode(params, tokens, cache, pos):
+        logits, new_cache, _ = transformer.lm_forward(params, cfg, tokens, pos=pos, cache=cache)
+        return logits, new_cache
+
+    return decode
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for one dry-run cell.  Decode cells carry
+    the KV cache (seq_len of context) as an input per the assignment."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), tok),
+            "labels": jax.ShapeDtypeStruct((B, S), tok),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of S context tokens
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+        "cache": cache_specs(cfg, B, S),
+    }

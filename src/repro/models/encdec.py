@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone.  The conv/mel frontend is a stub
+per the assignment: ``input_specs`` supplies precomputed frame embeddings
+(B, enc_frames, d_model); everything downstream (bidirectional encoder,
+causal decoder with cross-attention, KV caches) is real."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, MODEL_AXIS, Spec, constrain, tree_init, tree_specs
+from .layers import (
+    build_gqa_template,
+    build_mlp_template,
+    gqa_attention,
+    rms_norm,
+    sdpa,
+    swiglu_mlp,
+)
+
+F32 = jnp.float32
+
+
+def build_cross_template(cfg) -> Dict:
+    D, H, KVH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": Spec((D, H * Dh)),
+        "wk": Spec((D, KVH * Dh)),
+        "wv": Spec((D, KVH * Dh)),
+        "wo": Spec((H * Dh, D)),
+    }
+
+
+def cross_attention(p, cfg, x, mem_k, mem_v):
+    """Decoder x (B,S,D) attends to encoder memory K/V (B,T,KVH,Dh)."""
+    B, S, _ = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    T = mem_k.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, Dh)
+    kv_len = jnp.full((B,), T, jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = sdpa(q, mem_k, mem_v, pos, kv_len, causal=False)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * Dh), p["wo"])
+
+
+def cross_kv(p, mem, cfg):
+    B, T, _ = mem.shape
+    KVH, Dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("btd,dh->bth", mem, p["wk"]).reshape(B, T, KVH, Dh)
+    v = jnp.einsum("btd,dh->bth", mem, p["wv"]).reshape(B, T, KVH, Dh)
+    return k, v
+
+
+def build_encdec_template(cfg) -> Dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    enc_block = {
+        "attn_norm": Spec((D,), init="ones"),
+        "attn": build_gqa_template(cfg),
+        "mlp_norm": Spec((D,), init="ones"),
+        "mlp": build_mlp_template(cfg),
+    }
+    dec_block = {
+        "self_norm": Spec((D,), init="ones"),
+        "self_attn": build_gqa_template(cfg),
+        "cross_norm": Spec((D,), init="ones"),
+        "cross": build_cross_template(cfg),
+        "mlp_norm": Spec((D,), init="ones"),
+        "mlp": build_mlp_template(cfg),
+    }
+
+    def stack(t, L):
+        return jax.tree.map(
+            lambda s: Spec((L,) + s.shape, s.dtype, s.init, s.scale),
+            t,
+            is_leaf=lambda x: isinstance(x, Spec),
+        )
+
+    return {
+        "enc_blocks": stack(enc_block, cfg.n_enc_layers),
+        "enc_norm": Spec((D,), init="ones"),
+        "embed": Spec((V, D), scale=1.0),
+        "dec_blocks": stack(dec_block, cfg.n_layers),
+        "final_norm": Spec((D,), init="ones"),
+        "lm_head": Spec((D, V)),
+    }
+
+
+def encdec_param_specs(cfg):
+    return tree_specs(build_encdec_template(cfg))
+
+
+def encdec_init(cfg, key):
+    return tree_init(build_encdec_template(cfg), key)
+
+
+def encode(params, cfg, frames):
+    """frames (B, T_enc, D) from the stub frontend -> encoder memory."""
+    enc_cfg = dataclasses.replace(cfg, causal=False)
+    x = frames
+
+    def body(x, bp):
+        h, _ = gqa_attention(bp["attn"], enc_cfg, rms_norm(x, bp["attn_norm"]),
+                             jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]))
+        x = x + h
+        x = x + swiglu_mlp(bp["mlp"], rms_norm(x, bp["mlp_norm"]))
+        return constrain(x, BATCH_AXES, None, None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def encdec_cache_specs(cfg, batch: int, max_seq: int) -> Dict:
+    L, B = cfg.n_layers, batch
+    KVH, Dh, T = cfg.n_kv_heads, cfg.d_head, cfg.enc_frames
+    return {
+        "self_k": jax.ShapeDtypeStruct((L, B, max_seq, KVH, Dh), jnp.bfloat16),
+        "self_v": jax.ShapeDtypeStruct((L, B, max_seq, KVH, Dh), jnp.bfloat16),
+        "cross_k": jax.ShapeDtypeStruct((L, B, T, KVH, Dh), jnp.bfloat16),
+        "cross_v": jax.ShapeDtypeStruct((L, B, T, KVH, Dh), jnp.bfloat16),
+    }
+
+
+def encdec_init_cache(cfg, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), encdec_cache_specs(cfg, batch, max_seq))
+
+
+def decode_forward(params, cfg, tokens, memory=None, pos=0, cache: Optional[Dict] = None):
+    """Decoder forward.  Training/prefill supply ``memory`` (encoder output);
+    decode steps reuse the cached cross K/V instead."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def body(x, xs):
+        if cache is None:
+            bp = xs
+            h, _ = gqa_attention(bp["self_attn"], cfg, rms_norm(x, bp["self_norm"]), positions, None)
+            x = x + h
+            mk, mv = cross_kv(bp["cross"], memory, cfg)
+            x = x + cross_attention(bp["cross"], cfg, rms_norm(x, bp["cross_norm"]), mk, mv)
+            x = x + swiglu_mlp(bp["mlp"], rms_norm(x, bp["mlp_norm"]))
+            return constrain(x, BATCH_AXES, None, None), None
+        bp, lc = xs
+        h, (sk, sv) = gqa_attention(
+            bp["self_attn"], cfg, rms_norm(x, bp["self_norm"]), positions,
+            (lc["self_k"], lc["self_v"], pos),
+        )
+        x = x + h
+        if memory is not None:  # prefill: (re)build cross KV from memory
+            mk, mv = cross_kv(bp["cross"], memory, cfg)
+        else:
+            mk, mv = lc["cross_k"], lc["cross_v"]
+        x = x + cross_attention(bp["cross"], cfg, rms_norm(x, bp["cross_norm"]), mk, mv)
+        x = x + swiglu_mlp(bp["mlp"], rms_norm(x, bp["mlp_norm"]))
+        x = constrain(x, BATCH_AXES, None, None)
+        return x, {"self_k": sk, "self_v": sv, "cross_k": mk, "cross_v": mv}
+
+    if cache is None:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, BATCH_AXES, None, MODEL_AXIS)
+    return logits, new_cache
+
+
+def encdec_loss(params, cfg, batch):
+    memory = encode(params, cfg, batch["frames"])
+    logits, _ = decode_forward(params, cfg, batch["tokens"], memory=memory)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(F32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"ce": loss, "aux": jnp.zeros((), F32)}

@@ -1,0 +1,337 @@
+"""Recurrent mixers: RWKV-6 'Finch' time/channel mix (data-dependent decay,
+arXiv:2404.05892) and Mamba-2 SSD (arXiv:2405.21060).
+
+Both expose a *sequence* form (lax.scan over time — the pure-jnp oracle for
+the Pallas chunked kernel) and a *single-step* form used by decode.  State
+shapes are the objects the LSM store snapshots for prefix reuse
+(DESIGN.md §4: attention-free archs cache state snapshots, not token KV).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, MODEL_AXIS, Spec, constrain
+
+F32 = jnp.float32
+LORA_R = 32  # rank of the data-dependent interpolation MLPs (RWKV6 ddlerp)
+
+
+# ---------------------------------------------------------------- RWKV-6
+def build_rwkv6_template(cfg) -> Dict:
+    D = cfg.d_model
+    H, N = cfg.n_heads, cfg.d_head
+    return {
+        "time": {
+            # token-shift interpolation: static mus + low-rank data-dependent
+            "mu": Spec((5, D), init="small"),  # r,k,v,g,w
+            "lora_a": Spec((5, D, LORA_R), init="small"),
+            "lora_b": Spec((5, LORA_R, D), init="zeros"),
+            "w0": Spec((D,), init="small"),  # decay bias
+            "wr": Spec((D, D)),
+            "wk": Spec((D, D)),
+            "wv": Spec((D, D)),
+            "wg": Spec((D, D)),
+            "wo": Spec((D, D)),
+            "u": Spec((H, N), init="small"),  # bonus for current token
+            "ln_w": Spec((H, N), init="ones"),  # per-head group norm
+            "ln_b": Spec((H, N), init="zeros"),
+        },
+        "chan": {
+            "mu_k": Spec((D,), init="small"),
+            "mu_r": Spec((D,), init="small"),
+            "wk": Spec((D, cfg.d_ff)),
+            "wv": Spec((cfg.d_ff, D)),
+            "wr": Spec((D, D)),
+        },
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """RWKV6 data-dependent lerp: 5 mixed views of (x, shifted x)."""
+    diff = x_prev - x  # (B,S,D)
+    mixed = x[:, :, None, :] + diff[:, :, None, :] * p["mu"][None, None, :, :]
+    lora = jnp.einsum("bsfd,fdr->bsfr", jnp.tanh(mixed), p["lora_a"])
+    dyn = jnp.einsum("bsfr,frd->bsfd", lora, p["lora_b"])
+    out = x[:, :, None, :] + diff[:, :, None, :] * (p["mu"][None, None] + dyn)
+    return [out[:, :, i, :] for i in range(5)]
+
+
+# Chunked scans: per-token log-decay is clamped at -_LOG_CLAMP/chunk so the
+# within-chunk inverse-decay factor exp(-cum) stays finite in f32.  A channel
+# decaying faster than e^-80 per chunk has forgotten its state to below f32
+# resolution anyway, so the clamp is semantically free.
+_LOG_CLAMP = 80.0
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 16):
+    """Chunked RWKV6 WKV (FLA-style closed form) — same math as the
+    sequential scan but O(S/chunk) state round-trips and matmul-shaped
+    intra-chunk work.  r/k/v/w (B,S,H,N) f32; u (H,N); state (B,H,N,N) f32.
+    Returns (y (B,S,H,N) f32, state')."""
+    B, S, H, N = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)  # no-op steps
+    Sp = S + pad
+    nc = Sp // chunk
+
+    # NOTE(perf, refuted hypothesis): forcing H over the model axis here
+    # adds collective-permutes inside the chunk loop (+60% collective term)
+    # with no memory win — the projections' natural D-sharding already
+    # propagates through the reshape.  Keep propagation-driven sharding.
+    def resh(t):
+        return t.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4).astype(F32)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-38)), -_LOG_CLAMP / chunk)
+    cum = jnp.cumsum(logw, axis=2)  # (nc,B,C,H,N) inclusive
+    cum_prev = cum - logw
+    ti = jnp.arange(chunk)
+    lower = ti[:, None] > ti[None, :]  # strict j < t
+
+    def chunk_step(s, inp):
+        rb, kb, vb, cumb, cumpb = inp  # (B,C,H,N) each
+        r_dec = rb * jnp.exp(cumpb)  # exponent <= 0
+        k_inv = kb * jnp.exp(-cumb)  # bounded by the clamp
+        y_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, s)
+        A = jnp.einsum("bthn,bjhn->bhtj", r_dec, k_inv)
+        A = jnp.where(lower[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhtj,bjhm->bthm", A, vb)
+        diag = jnp.sum(rb * u[None, None] * kb, axis=-1)  # (B,C,H)
+        y = y_inter + y_intra + diag[..., None] * vb
+        cum_last = cumb[:, -1]  # (B,H,N)
+        k_rem = kb * jnp.exp(cum_last[:, None] - cumb)
+        s_new = jnp.exp(cum_last)[..., None] * s + jnp.einsum("bchn,bchm->bhnm", k_rem, vb)
+        return s_new, y
+
+    s_new, ys = jax.lax.scan(chunk_step, state.astype(F32), (rc, kc, vc, cum, cum_prev))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, N)
+    return y[:, :S], s_new
+
+
+def rwkv6_time_mix(p, cfg, x, state: Tuple):
+    """x (B,S,D); state = (shift (B,D), wkv (B,H,N,N)).  Returns out + new
+    state.  S==1 steps sequentially; longer sequences use the chunked
+    closed form (bounded backward residuals)."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.d_head
+    shift, wkv = state
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xg, xw = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # data-dependent decay w in (0,1): exp(-exp(w0 + dyn))
+    w = jnp.exp(-jnp.exp((p["w0"][None, None] + xw).astype(F32))).reshape(B, S, H, N)
+
+    u = p["u"].astype(F32)
+
+    if S > 1:
+        y, wkv_new = wkv_chunked(r, k, v, w, u, wkv.astype(F32))
+    else:
+
+        def step(s, inp):
+            rt, kt, vt, wt = inp  # (B,H,N) each
+            kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+            y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+            s_new = wt[..., :, None] * s + kv
+            return s_new, y
+
+        xs = (
+            r.transpose(1, 0, 2, 3).astype(F32),
+            k.transpose(1, 0, 2, 3).astype(F32),
+            v.transpose(1, 0, 2, 3).astype(F32),
+            w.transpose(1, 0, 2, 3).astype(F32),
+        )
+        wkv_new, ys = jax.lax.scan(step, wkv.astype(F32), xs)
+        y = ys.transpose(1, 0, 2, 3)  # (B,S,H,N)
+    # per-head group norm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5) * p["ln_w"][None, None] + p["ln_b"][None, None]
+    out = (y.reshape(B, S, D) * g.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    return out, (x[:, -1, :], wkv_new.astype(F32))
+
+
+def rwkv6_channel_mix(p, cfg, x, shift):
+    B, S, D = x.shape
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"][None, None]
+    xr = x + (x_prev - x) * p["mu_r"][None, None]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv6_state_specs(cfg, batch: int):
+    H, N, D = cfg.n_heads, cfg.d_head, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "time_shift": jax.ShapeDtypeStruct((L, batch, D), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, N, N), jnp.float32),
+        "chan_shift": jax.ShapeDtypeStruct((L, batch, D), jnp.bfloat16),
+    }
+
+
+def rwkv6_init_state(cfg, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), rwkv6_state_specs(cfg, batch))
+
+
+# ---------------------------------------------------------------- Mamba-2
+def build_mamba2_template(cfg) -> Dict:
+    D = cfg.d_model
+    d_in = cfg.expand * D
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    # in_proj emits z, x, B, C, dt
+    return {
+        "w_in": Spec((D, 2 * d_in + 2 * N + H)),
+        "conv_w": Spec((cfg.d_conv, d_in + 2 * N), init="small"),
+        "conv_b": Spec((d_in + 2 * N,), init="zeros"),
+        "a_log": Spec((H,), init="small"),
+        "dt_bias": Spec((H,), init="small"),
+        "d_skip": Spec((H,), init="ones"),
+        "norm_w": Spec((d_in,), init="ones"),
+        "w_out": Spec((d_in, D)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x (B,S,C), w (K,C).  state (B,K-1,C) carries
+    the tail of the previous segment; returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    y = y + b[None, None, :]
+    return jax.nn.silu(y), xp[:, -(K - 1) :, :]
+
+
+def mamba2_ssd_chunked(xin, Bm, Cm, a, dt, ssm0, chunk: int = 256):
+    """Chunked SSD (Mamba-2 paper §6): intra-chunk work as masked matmuls,
+    inter-chunk state carried once per chunk.  xin (B,S,H,P); Bm/Cm (B,S,N);
+    a/dt (B,S,H) f32; ssm0 (B,H,P,N) f32.  Returns (y (B,S,H,P) f32, s')."""
+    B_, S, H, P = xin.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = xin.reshape(B_, nc, chunk, H, P).transpose(1, 0, 2, 3, 4).astype(F32)
+    bc = Bm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3).astype(F32)
+    cc = Cm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3).astype(F32)
+    ac = a.reshape(B_, nc, chunk, H).transpose(1, 0, 2, 3).astype(F32)
+    dc = dt.reshape(B_, nc, chunk, H).transpose(1, 0, 2, 3).astype(F32)
+    # per-head scalar decay: log-differences are formed BEFORE exp, so the
+    # kept (j <= t) entries have exponent <= 0 — exact, no clamp needed.
+    # Masked entries are set to -inf pre-exp (post-exp masking of overflowed
+    # values would produce NaN gradients through the untaken branch).
+    loga = jnp.log(jnp.maximum(ac, 1e-38))
+    cum = jnp.cumsum(loga, axis=2)  # (nc,B,C,H) inclusive
+    ti = jnp.arange(chunk)
+    incl = ti[:, None] >= ti[None, :]  # j <= t (y uses the post-update state)
+
+    def chunk_step(s, inp):
+        xb, bb, cb, cumb, db = inp
+        G = jnp.einsum("btn,bjn->btj", cb, bb)  # (B,C,C)
+        delta = cumb[:, :, None, :] - cumb[:, None, :, :]  # (B,t,j,H)
+        L = jnp.exp(jnp.where(incl[None, :, :, None], delta, -jnp.inf))
+        W = G[..., None] * L * db[:, None]
+        y_intra = jnp.einsum("btjh,bjhp->bthp", W, xb)
+        y_inter = jnp.exp(cumb)[..., None] * jnp.einsum("btn,bhpn->bthp", cb, s)
+        cum_last = cumb[:, -1]  # (B,H)
+        decay_rem = jnp.exp(cum_last[:, None] - cumb) * db  # (B,C,H)
+        s_new = jnp.exp(cum_last)[..., None, None] * s + jnp.einsum(
+            "bch,bchp,bcn->bhpn", decay_rem, xb, bb
+        )
+        return s_new, y_intra + y_inter
+
+    s_new, ys = jax.lax.scan(chunk_step, ssm0.astype(F32), (xc, bc, cc, cum, dc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, Sp, H, P)
+    return y[:, :S], s_new
+
+
+def mamba2_mix(p, cfg, x, state: Tuple):
+    """SSD sequence form.  state = (conv_state (B,K-1,C), ssm (B,H,P,N)).
+    S==1 steps sequentially; longer sequences use chunked SSD."""
+    B, S, D = x.shape
+    d_in = cfg.expand * D
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = d_in // H
+    conv_state, ssm = state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xc, dt = (
+        zxbcdt[..., :d_in],
+        zxbcdt[..., d_in : 2 * d_in + 2 * N],
+        zxbcdt[..., 2 * d_in + 2 * N :],
+    )
+    xc, conv_new = _causal_conv(xc, p["conv_w"], p["conv_b"], conv_state)
+    xin = xc[..., :d_in].reshape(B, S, H, P)
+    Bm = xc[..., d_in : d_in + N]
+    Cm = xc[..., d_in + N :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None].astype(F32))  # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(F32))[None, None])  # decay (B,S,H)
+
+    if S > 1:
+        y, ssm_new = mamba2_ssd_chunked(xin, Bm, Cm, a, dt, ssm.astype(F32))
+    else:
+
+        def step(s, inp):
+            xt, bt, ct, at, dtt = inp  # (B,H,P),(B,N),(B,N),(B,H),(B,H)
+            upd = (dtt * 1.0)[..., None, None] * (xt[..., :, None] * bt[:, None, None, :])
+            s_new = at[..., None, None] * s + upd  # (B,H,P,N)
+            y = jnp.einsum("bhpn,bn->bhp", s_new, ct)
+            return s_new, y
+
+        xs = (
+            xin.transpose(1, 0, 2, 3).astype(F32),
+            Bm.transpose(1, 0, 2).astype(F32),
+            Cm.transpose(1, 0, 2).astype(F32),
+            a.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2),
+        )
+        ssm_new, ys = jax.lax.scan(step, ssm.astype(F32), xs)
+        y = ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+    y = y + p["d_skip"].astype(F32)[None, None, :, None] * xin.astype(F32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2 norm_before_gate=False)
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["norm_w"].astype(F32)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(x.dtype), p["w_out"])
+    return out, (conv_new, ssm_new.astype(F32))
+
+
+def mamba2_state_specs(cfg, batch: int):
+    D = cfg.d_model
+    d_in = cfg.expand * D
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = d_in // H
+    L = cfg.n_layers
+    K = cfg.d_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, K - 1, d_in + 2 * N), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba2_init_state(cfg, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), mamba2_state_specs(cfg, batch))

@@ -1,0 +1,316 @@
+"""Decoder-LM assembly for all LM-family architectures (dense / moe / rwkv6
+/ hybrid).  One composable forward covering train (no cache), prefill
+(cache fill, optional reused-prefix offset), and decode (single step).
+
+Layers are stacked on a leading L axis and driven by ``jax.lax.scan`` so the
+traced graph (and compile time) is O(1) in depth — essential for the 61-layer
+/ 512-device dry-runs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, MODEL_AXIS, Spec, constrain, current_mesh, tree_init, tree_specs
+from .layers import (
+    build_gqa_template,
+    build_mla_template,
+    build_mlp_template,
+    build_moe_template,
+    gqa_attention,
+    mla_attention,
+    moe_layer,
+    rms_norm,
+    swiglu_mlp,
+)
+from .ssm import (
+    build_mamba2_template,
+    build_rwkv6_template,
+    mamba2_mix,
+    rwkv6_channel_mix,
+    rwkv6_time_mix,
+)
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------- templates
+def _attn_template(cfg):
+    return build_mla_template(cfg) if cfg.attention == "mla" else build_gqa_template(cfg)
+
+
+def build_block_template(cfg) -> Dict:
+    fam = cfg.family
+    if fam == "dense":
+        return {
+            "attn_norm": Spec((cfg.d_model,), init="ones"),
+            "attn": _attn_template(cfg),
+            "mlp_norm": Spec((cfg.d_model,), init="ones"),
+            "mlp": build_mlp_template(cfg),
+        }
+    if fam == "moe":
+        return {
+            "attn_norm": Spec((cfg.d_model,), init="ones"),
+            "attn": _attn_template(cfg),
+            "moe_norm": Spec((cfg.d_model,), init="ones"),
+            "moe": build_moe_template(cfg),
+        }
+    if fam == "rwkv6":
+        return {
+            "ln1": Spec((cfg.d_model,), init="ones"),
+            "ln2": Spec((cfg.d_model,), init="ones"),
+            **build_rwkv6_template(cfg),
+        }
+    if fam == "hybrid":
+        return {
+            "norm": Spec((cfg.d_model,), init="ones"),
+            "mamba": build_mamba2_template(cfg),
+        }
+    raise ValueError(fam)
+
+
+def _stack(template, L: int):
+    return jax.tree.map(
+        lambda s: Spec((L,) + s.shape, s.dtype, s.init, s.scale),
+        template,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def build_lm_template(cfg) -> Dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    t = {
+        "embed": Spec((V, D), scale=1.0),
+        "blocks": _stack(build_block_template(cfg), cfg.n_layers),
+        "final_norm": Spec((D,), init="ones"),
+        "lm_head": Spec((D, V)),
+    }
+    if cfg.family == "hybrid":
+        # one shared transformer block, reused at every site (Zamba2)
+        t["shared_attn"] = {
+            "attn_norm": Spec((D,), init="ones"),
+            "attn": build_gqa_template(cfg),
+            "mlp_norm": Spec((D,), init="ones"),
+            "mlp": build_mlp_template(cfg),
+        }
+    return t
+
+
+def lm_param_specs(cfg):
+    return tree_specs(build_lm_template(cfg))
+
+
+def lm_init(cfg, key):
+    return tree_init(build_lm_template(cfg), key)
+
+
+# ----------------------------------------------------------------- caches
+def n_attn_sites(cfg) -> int:
+    if cfg.family != "hybrid":
+        return cfg.n_layers
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def cache_specs(cfg, batch: int, max_seq: int) -> Dict:
+    """ShapeDtypeStruct tree of the serve-time cache (the object the LSM
+    store persists block-wise)."""
+    L, B, S = cfg.n_layers, batch, max_seq
+    fam = cfg.family
+    if fam == "rwkv6":
+        from .ssm import rwkv6_state_specs
+
+        return rwkv6_state_specs(cfg, batch)
+    if fam == "hybrid":
+        from .ssm import mamba2_state_specs
+
+        sites = n_attn_sites(cfg)
+        return {
+            **mamba2_state_specs(cfg, batch),
+            "attn_k": jax.ShapeDtypeStruct((sites, B, S, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+            "attn_v": jax.ShapeDtypeStruct((sites, B, S, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+        }
+    if cfg.attention == "mla":
+        return {
+            "c": jax.ShapeDtypeStruct((L, B, S, cfg.kv_lora_rank), jnp.bfloat16),
+            "kr": jax.ShapeDtypeStruct((L, B, S, cfg.qk_rope_dim), jnp.bfloat16),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((L, B, S, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((L, B, S, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------- forward
+def _attn_apply(bp, cfg, x, positions, cache):
+    if cfg.attention == "mla":
+        return mla_attention(bp, cfg, x, positions, cache)
+    return gqa_attention(bp, cfg, x, positions, cache)
+
+
+def lm_forward(params, cfg, tokens, pos=0, cache: Optional[Dict] = None, embeds=None):
+    """tokens (B,S) int32.  ``cache=None`` => training forward.  Otherwise
+    the cache is consumed/updated at offset ``pos`` (scalar).  Returns
+    (logits (B,S,V), new_cache, aux) with aux = dict of aux losses."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] if embeds is None else embeds
+    # Megatron-style sequence parallelism: residual-stream activations are
+    # sharded over the model axis on the seq dim between blocks (attention
+    # gathers seq and shards heads; MLP shards hidden).  Cuts saved-remat
+    # activation memory by the TP degree.
+    mesh = current_mesh()
+    msize = 1
+    if mesh is not None and MODEL_AXIS in mesh.axis_names:
+        msize = dict(zip(mesh.axis_names, mesh.devices.shape))[MODEL_AXIS]
+    seq_axis = MODEL_AXIS if (cfg.seq_shard and msize > 1 and S % msize == 0) else None
+    x = constrain(x, BATCH_AXES, seq_axis, None)
+    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    fam = cfg.family
+    aux_acc = jnp.zeros((), F32)
+
+    if fam in ("dense", "moe"):
+        cache_keys = ("c", "kr") if cfg.attention == "mla" else ("k", "v")
+
+        def block_compute(bp, x, aux, layer_cache):
+            h = rms_norm(x, bp["attn_norm"])
+            h, new_cache = _attn_apply(bp["attn"], cfg, h, positions, layer_cache)
+            x = x + h
+            if fam == "dense":
+                h = rms_norm(x, bp["mlp_norm"])
+                x = x + swiglu_mlp(bp["mlp"], h)
+            else:
+                h = rms_norm(x, bp["moe_norm"])
+                mo, probs = moe_layer(bp["moe"], cfg, h, dropless=cache is not None)
+                x = x + mo
+                me = probs.mean(axis=0)
+                aux = aux + cfg.n_experts * jnp.sum(me * me)  # mean-prob balance proxy
+            x = constrain(x, BATCH_AXES, seq_axis, None)
+            return x, aux, new_cache
+
+        if cache is None:
+
+            def body(carry, bp):
+                x, aux = carry
+                x, aux, _ = block_compute(bp, x, aux, None)
+                return (x, aux), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux_acc), _ = jax.lax.scan(body, (x, aux_acc), params["blocks"])
+            new_cache = None
+        else:
+            # Cache rides as scan xs/ys.  NOTE(perf, measured): the
+            # carry-with-layer-index form (MaxText-style) was tried and
+            # REGRESSED the decode memory term 20% on this backend (extra
+            # f32 layer-slice round-trips from CPU bf16-dot legalization);
+            # see EXPERIMENTS §Perf iteration A3.
+            def body(carry, xs):
+                x, aux = carry
+                bp, lc = xs
+                layer_cache = (lc[cache_keys[0]], lc[cache_keys[1]], pos)
+                x, aux, new_lc = block_compute(bp, x, aux, layer_cache)
+                return (x, aux), dict(zip(cache_keys, new_lc))
+
+            (x, aux_acc), new_cache = jax.lax.scan(body, (x, aux_acc), (params["blocks"], cache))
+
+    elif fam == "rwkv6":
+        live = cache if cache is not None else init_cache(cfg, B, 0)
+
+        def body(carry, xs):
+            x = carry
+            bp, lc = xs
+            h, (tshift, wkv) = rwkv6_time_mix(
+                bp["time"], cfg, rms_norm(x, bp["ln1"]), (lc["time_shift"], lc["wkv"])
+            )
+            x = x + h
+            h, cshift = rwkv6_channel_mix(bp["chan"], cfg, rms_norm(x, bp["ln2"]), lc["chan_shift"])
+            x = x + h
+            return x, {"time_shift": tshift, "wkv": wkv, "chan_shift": cshift}
+
+        if cfg.remat and cache is None:
+            body = jax.checkpoint(body)
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], live))
+        if cache is None:
+            new_cache = None
+
+    elif fam == "hybrid":
+        live = cache if cache is not None else init_cache(cfg, B, 0)
+        sp = params["shared_attn"]
+        has_attn_cache = cache is not None
+        attn_k = live.get("attn_k") if has_attn_cache else None
+        attn_v = live.get("attn_v") if has_attn_cache else None
+
+        def apply_shared(x, ak, av, site_idx):
+            h = rms_norm(x, sp["attn_norm"])
+            if has_attn_cache:
+                ck = jax.lax.dynamic_index_in_dim(ak, site_idx, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(av, site_idx, 0, keepdims=False)
+                h, (ck2, cv2) = gqa_attention(sp["attn"], cfg, h, positions, (ck, cv, pos))
+                ak = jax.lax.dynamic_update_index_in_dim(ak, ck2, site_idx, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, cv2, site_idx, 0)
+            else:
+                h, _ = gqa_attention(sp["attn"], cfg, h, positions, None)
+            x = x + h
+            x = x + swiglu_mlp(sp["mlp"], rms_norm(x, sp["mlp_norm"]))
+            return x, ak, av
+
+        def body(carry, xs):
+            x, ak, av, lidx = carry
+            bp, lc = xs
+            h, (conv, ssm) = mamba2_mix(bp["mamba"], cfg, rms_norm(x, bp["norm"]), (lc["conv"], lc["ssm"]))
+            x = x + h
+            is_site = (lidx % cfg.attn_every) == 0
+            site_idx = lidx // cfg.attn_every
+            if has_attn_cache:
+                x, ak, av = jax.lax.cond(
+                    is_site,
+                    lambda op: apply_shared(*op),
+                    lambda op: (op[0], op[1], op[2]),
+                    (x, ak, av, site_idx),
+                )
+            else:
+                x, _, _ = jax.lax.cond(
+                    is_site,
+                    lambda op: apply_shared(op, None, None, 0),
+                    lambda op: (op, None, None),
+                    x,
+                )
+            return (x, ak, av, lidx + 1), {"conv": conv, "ssm": ssm}
+
+        if not has_attn_cache:
+            attn_k = attn_v = jnp.zeros((), jnp.bfloat16)  # unused placeholders
+        if cfg.remat and cache is None:
+            body = jax.checkpoint(body)
+        (x, attn_k, attn_v, _), mamba_out = jax.lax.scan(
+            body,
+            (x, attn_k, attn_v, jnp.int32(0)),
+            (params["blocks"], {"conv": live["conv"], "ssm": live["ssm"]}),
+        )
+        if cache is None:
+            new_cache = None
+        else:
+            new_cache = {**mamba_out, "attn_k": attn_k, "attn_v": attn_v}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, BATCH_AXES, None, MODEL_AXIS)
+    return logits, new_cache, {"aux_loss": aux_acc}
+
+
+# ------------------------------------------------------------------- loss
+def lm_loss(params, cfg, batch, aux_weight: float = 0.01):
+    logits, _, aux = lm_forward(params, cfg, batch["tokens"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(F32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux["aux_loss"], {"ce": loss, "aux": aux["aux_loss"]}

@@ -1,0 +1,85 @@
+"""Calibrated TTFT compute model.
+
+This container is CPU-only and single-core, so full-size prefill compute
+cannot be *measured*; the paper's TTFT has two components we account
+separately (DESIGN.md §7):
+
+  * I/O — measured for real against the actual disk backends.
+  * compute — modeled: we time a real prefill of the reduced (smoke) model
+    once on this host, derive its achieved FLOP/s, and scale by the analytic
+    FLOP ratio to the full model on the paper's GPU (A30, 165 TFLOP/s bf16
+    dense, ~60 % MFU assumed for prefill) or any target device.
+
+The model covers segmented prefill: sequences longer than ``segment``
+tokens prefill in chunks with per-segment scheduling overhead, matching the
+paper's observation that long prompts pay extra scheduling/memory-management
+cost under GPU memory pressure.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+def prefill_flops(cfg, n_tokens: int, context: int = 0) -> float:
+    """Analytic forward FLOPs to prefill ``n_tokens`` given ``context``
+    already-cached tokens."""
+    n = cfg.active_param_count()
+    base = 2.0 * n * n_tokens
+    if cfg.attention != "none" and cfg.family != "rwkv6":
+        sites = cfg.n_layers if cfg.attn_every == 0 else cfg.n_layers // cfg.attn_every
+        # causal attention over (context + position) keys
+        total_kv = n_tokens * context + n_tokens * (n_tokens + 1) / 2
+        base += 4.0 * sites * cfg.n_heads * cfg.d_head * total_kv
+    return base
+
+
+@dataclass
+class ComputeModel:
+    """TTFT compute estimator for one (model, device) pair."""
+
+    cfg: object  # full ModelConfig
+    device_flops: float = 165e12 * 0.6  # A30 bf16 at 60% prefill MFU
+    segment: int = 2048  # segmented-prefill chunk (GPU memory pressure)
+    segment_overhead_s: float = 0.008  # scheduler + memory mgmt per segment
+    decode_tok_s: float = 0.02  # per output token (not in TTFT)
+
+    def prefill_s(self, n_tokens: int, context: int = 0) -> float:
+        if n_tokens <= 0:
+            return 0.0
+        segs = max(1, -(-n_tokens // self.segment))
+        fl = prefill_flops(self.cfg, n_tokens, context)
+        return fl / self.device_flops + segs * self.segment_overhead_s
+
+    def ttft(self, prompt_len: int, reused: int, io_s: float) -> float:
+        """TTFT = promotion I/O + compute for the non-reused suffix."""
+        return io_s + self.prefill_s(prompt_len - reused, context=reused)
+
+
+def calibrate_host_flops(smoke_cfg, n_tokens: int = 256, iters: int = 2) -> float:
+    """Measure this host's achieved FLOP/s on a real smoke-model prefill —
+    grounds the compute model in a real measurement (used by examples that
+    serve the tiny model for real)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import api
+
+    params = api.init_params(smoke_cfg, jax.random.key(0))
+    pfn = api.prefill_fn(smoke_cfg)
+    cache = api.init_cache(smoke_cfg, 1, n_tokens)
+    toks = jnp.zeros((1, n_tokens), jnp.int32)
+    inputs = {"tokens": toks}
+    if smoke_cfg.family == "encdec":
+        inputs["frames"] = jnp.zeros((1, smoke_cfg.enc_frames, smoke_cfg.d_model), jnp.bfloat16)
+    step = jax.jit(lambda p, i, c: pfn(p, i, c, 0)[0])
+    step(params, inputs, cache).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        step(params, inputs, cache).block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return prefill_flops(smoke_cfg, n_tokens) / max(dt, 1e-9)

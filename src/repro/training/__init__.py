@@ -1,0 +1,2 @@
+"""Training runtime: in-repo optimizer, data pipeline, sharded
+checkpointing with elastic restore, and the auto-resuming train loop."""

@@ -1,0 +1,124 @@
+"""Sharded checkpointing with atomic commit and elastic restore.
+
+Layout::
+
+    <dir>/step_000123/
+        shard_00000.npz ... shard_NNNNN.npz   (one per checkpoint shard)
+        MANIFEST.json                          (atomic commit marker)
+
+Writes go to ``step_XXX.tmp/`` and are renamed into place only after the
+manifest is fully written — a crash mid-checkpoint leaves no half-valid
+step, and ``latest_step`` only ever sees committed checkpoints (the train
+loop's auto-resume contract).
+
+Elastic restore: arrays are stored per-leaf (container-scale checkpoints
+fit a host); ``restore`` re-device_puts every leaf under the *current*
+mesh's shardings, so a checkpoint taken on one mesh shape restores onto
+any other (tested 2x2 -> 4x1 and 1-pod -> 2-pod smoke meshes).  At real
+scale the same manifest format extends to per-shard files keyed by
+PartitionSpec — the commit protocol is the part that matters.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    """Atomically persist ``tree`` (params/opt_state/metadata pytree)."""
+    leaves, _ = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    arrs = {}
+    for i, leaf in enumerate(leaves):
+        a = np.asarray(leaf)
+        if a.dtype.name == "bfloat16":  # npz can't store bf16 natively
+            arrs[f"leaf_{i:05d}__bf16"] = a.view(np.uint16)
+        else:
+            arrs[f"leaf_{i:05d}"] = a
+    np.savez(os.path.join(tmp, "shard_00000.npz"), **arrs)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "format": 1,
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *committed* step (tmp dirs and manifest-less dirs ignored)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(ckpt_dir, name, "MANIFEST.json")):
+            continue
+        s = int(name.split("_")[1])
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore a pytree saved by ``save``.  ``like`` supplies the treedef
+    (and dtypes); ``shardings`` (optional pytree of NamedSharding) places
+    every leaf for the current mesh — elastic resharding is just this
+    placement, since leaves are stored whole."""
+    import ml_dtypes
+
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_00000.npz"))
+    leaves_like, treedef = _flatten(like)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves_like)}"
+        )
+    out = []
+    for i in range(len(leaves_like)):
+        if f"leaf_{i:05d}__bf16" in data:
+            a = data[f"leaf_{i:05d}__bf16"].view(ml_dtypes.bfloat16)
+        else:
+            a = data[f"leaf_{i:05d}"]
+        out.append(a)
+    tree = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, n, "MANIFEST.json"))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"))

@@ -1,0 +1,161 @@
+"""In-repo optimizer: AdamW with production memory knobs.
+
+Two distributed-scale options (used by the 1T-param kimi-k2 config, where
+fp32 moments alone would be 8 TB):
+
+  * ``moment_dtype`` — store the first moment in bf16 (stochastic-rounding
+    -free variant; the fp32 master math happens in-register per step).
+  * ``factored_second_moment`` — Adafactor-style row/col factorization of v
+    for >=2D parameters: O(n+m) state instead of O(n*m).
+
+Optimizer state inherits the parameter sharding (ZeRO: moments are sharded
+exactly like their parameter, so they never replicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"  # float32 | bfloat16
+    factored_second_moment: bool = False
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to ``min_lr_frac``."""
+    step = step.astype(F32)
+    warm = cfg.lr * step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def init_state(cfg: OptimizerConfig, params) -> Dict:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else F32
+
+    def leaf_m(p):
+        return jnp.zeros(p.shape, mdt)
+
+    def leaf_v(p):
+        if cfg.factored_second_moment and _is_factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], F32),  # row stat (sum over last dim)
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32),  # col stat
+            }
+        return {"v": jnp.zeros(p.shape, F32)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(leaf_m, params),
+        "v": jax.tree.map(leaf_v, params, is_leaf=lambda x: hasattr(x, "shape")),
+    }
+
+
+def state_specs(cfg: OptimizerConfig, param_specs) -> Dict:
+    """ShapeDtypeStruct tree mirroring ``init_state`` (dry-run path)."""
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else F32
+
+    def leaf_m(p):
+        return jax.ShapeDtypeStruct(p.shape, mdt)
+
+    def leaf_v(p):
+        if cfg.factored_second_moment and _is_factored(p.shape):
+            return {
+                "vr": jax.ShapeDtypeStruct(p.shape[:-1], F32),
+                "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:], F32),
+            }
+        return {"v": jax.ShapeDtypeStruct(p.shape, F32)}
+
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(leaf_m, param_specs),
+        "v": jax.tree.map(leaf_v, param_specs, is_leaf=lambda x: hasattr(x, "shape")),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    nrm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), nrm
+
+
+def _update_leaf(cfg: OptimizerConfig, lr, t, p, g, m, v):
+    b1, b2 = cfg.betas
+    gf = g.astype(F32)
+    m_new = b1 * m.astype(F32) + (1 - b1) * gf
+    if "v" in v:
+        v_new = {"v": b2 * v["v"] + (1 - b2) * gf * gf}
+        v_hat = v_new["v"] / (1 - b2**t)
+    else:
+        g2 = gf * gf
+        v_new = {
+            "vr": b2 * v["vr"] + (1 - b2) * g2.mean(axis=-1),
+            "vc": b2 * v["vc"] + (1 - b2) * g2.mean(axis=-2),
+        }
+        # rank-1 reconstruction: vr ⊗ vc / mean(vc)
+        denom = jnp.maximum(v_new["vc"].mean(axis=-1, keepdims=True), 1e-30)
+        v_hat = (v_new["vr"][..., None] * v_new["vc"][..., None, :] / denom[..., None]) / (1 - b2**t)
+    m_hat = m_new / (1 - b1**t)
+    upd = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+    if p.ndim >= 2:  # decoupled weight decay on matrices only
+        upd = upd + cfg.weight_decay * p.astype(F32)
+    p_new = (p.astype(F32) - lr * upd).astype(p.dtype)
+    return p_new, m_new.astype(m.dtype), jax.tree.map(lambda a, b: b, v, v_new)
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(F32)
+    lr = lr_schedule(cfg, step)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    # v leaves are dicts; flatten at the dict level
+    v_subtrees = jax.tree.flatten(
+        state["v"], is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    )[0]
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, v_subtrees):
+        pn, mn, vn = _update_leaf(cfg, lr, t, p, g, m, v)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+
+    params_out = jax.tree.unflatten(treedef, new_p)
+    state_out = {
+        "step": step,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    return params_out, state_out, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,1 @@
+from .staged import PAPER_STAGES, Request, StagedWorkload  # noqa: F401

@@ -1,0 +1,81 @@
+"""Synthetic staged-hit-rate workload (paper §4.1).
+
+The workload progresses through stages with expected hit rates
+[0.2 0.3 0.5 0.7 0.5 0.3 0.1 0.3 0.5 0.7]; each stage issues
+``requests_per_stage`` requests of ``prompt_len`` tokens.  The expected hit
+rate is the ratio of shared prompt tokens to total prompt tokens: a request
+reuses the first ``hit_rate * prompt_len`` tokens of a previously issued
+prompt (drawn from a warm corpus) and fills the tail with fresh tokens.
+
+A warmup phase (paper: 100M tokens of KV cache, write-through) populates
+both the memory tiers and the disk backend before measurement; the corpus
+of warmup prefixes is what later stages share against.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PAPER_STAGES = (0.2, 0.3, 0.5, 0.7, 0.5, 0.3, 0.1, 0.3, 0.5, 0.7)
+
+
+@dataclass
+class Request:
+    rid: int
+    stage: int
+    tokens: List[int]
+    expected_hit: float
+
+
+@dataclass
+class StagedWorkload:
+    prompt_len: int = 4096
+    requests_per_stage: int = 1000
+    stages: Sequence[float] = PAPER_STAGES
+    vocab: int = 50_000
+    block_size: int = 16
+    corpus_size: int = 512  # distinct shared-prefix roots
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        # corpus roots: long random token runs requests share prefixes of
+        self.corpus = [
+            self.rng.integers(0, self.vocab, size=self.prompt_len).tolist()
+            for _ in range(self.corpus_size)
+        ]
+        self._rid = 0
+
+    # ------------------------------------------------------------- warmup
+    def warmup_prompts(self, total_tokens: int) -> Iterator[List[int]]:
+        """Prompts covering the corpus until ~total_tokens have been issued
+        (the paper's 100M-token write-through warmup, scaled by callers)."""
+        issued = 0
+        i = 0
+        while issued < total_tokens:
+            p = self.corpus[i % len(self.corpus)]
+            yield list(p)
+            issued += len(p)
+            i += 1
+
+    # ------------------------------------------------------------ requests
+    def _make_request(self, stage_idx: int, hit: float) -> Request:
+        shared = int(round(hit * self.prompt_len))
+        # share a block-aligned prefix so cache-block granularity can hit it
+        shared = (shared // self.block_size) * self.block_size
+        root = self.corpus[int(self.rng.integers(0, len(self.corpus)))]
+        fresh = self.rng.integers(0, self.vocab, size=self.prompt_len - shared)
+        toks = list(root[:shared]) + fresh.tolist()
+        self._rid += 1
+        return Request(self._rid, stage_idx, toks, hit)
+
+    def requests(self) -> Iterator[Request]:
+        for si, hit in enumerate(self.stages):
+            for _ in range(self.requests_per_stage):
+                yield self._make_request(si, hit)
+
+    def stage_requests(self, stage_idx: int) -> List[Request]:
+        return [self._make_request(stage_idx, self.stages[stage_idx]) for _ in range(self.requests_per_stage)]

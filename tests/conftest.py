@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests must see exactly 1 device (dry-run sets its own XLA_FLAGS in a
+# subprocess); keep CPU planes deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,181 @@
+"""Tests for the radix tree + tier hierarchy (paper §2.1 integration)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache import (
+    TIER_DEVICE,
+    TIER_DISK,
+    TIER_HOST,
+    CacheHierarchy,
+    RadixTree,
+)
+from repro.core import CODEC_RAW, BatchCodec, KVBlockStore
+
+B = 4
+
+
+def _blocks(rng, n):
+    return [rng.standard_normal((2, B, 4), dtype=np.float32) for _ in range(n)]
+
+
+def _hier(tmp_path, dev=8, host=8, store=True, **kw):
+    st_ = None
+    if store:
+        st_ = KVBlockStore(str(tmp_path / "kvs"), block_size=B, buffer_bytes=1 << 16,
+                           codec=BatchCodec(CODEC_RAW, use_zlib=False))
+    return CacheHierarchy(B, dev, host, store=st_, **kw)
+
+
+# ------------------------------------------------------------------ radix
+def test_radix_match_and_insert():
+    t = RadixTree(B)
+    toks = list(range(16))
+    assert t.match_prefix(toks) == []
+    path = t.insert_path(toks)
+    assert len(path) == 4
+    assert [n.depth for n in path] == [1, 2, 3, 4]
+    # shared prefix
+    other = toks[:8] + [99] * 8
+    m = t.match_prefix(other)
+    assert len(m) == 2
+    path2 = t.insert_path(other)
+    assert path2[:2] == m
+    assert t.n_nodes == 6
+
+
+@given(st.lists(st.lists(st.integers(0, 5), min_size=B, max_size=6 * B), min_size=1, max_size=20))
+@settings(max_examples=25, deadline=None)
+def test_radix_matches_oracle(seqs):
+    """match_prefix == longest stored block-prefix (dict oracle)."""
+    t = RadixTree(B)
+    oracle = set()
+    for toks in seqs:
+        t.insert_path(toks)
+        for i in range(len(toks) // B):
+            oracle.add(tuple(toks[: (i + 1) * B]))
+        m = t.match_prefix(toks)
+        want = 0
+        for i in range(len(toks) // B, 0, -1):
+            if tuple(toks[: i * B]) in oracle:
+                want = i
+                break
+        assert len(m) == want
+
+
+def test_radix_eviction_order_lru():
+    t = RadixTree(B)
+    a = t.insert_path(list(range(4)))[-1]
+    b = t.insert_path(list(range(100, 104)))[-1]
+    for n in (a, b):
+        n.tier = TIER_DEVICE
+    a.touch()  # a is now most recent
+    leaves = t.evictable_leaves(TIER_DEVICE)
+    assert leaves[0] is b and leaves[1] is a
+    b.lock += 1
+    assert t.evictable_leaves(TIER_DEVICE) == [a]
+
+
+# -------------------------------------------------------------- hierarchy
+def test_acquire_commit_roundtrip(tmp_path):
+    h = _hier(tmp_path)
+    rng = np.random.default_rng(0)
+    toks = list(range(16))
+    acq = h.acquire(toks)
+    assert acq.reuse_tokens == 0
+    h.commit(toks, _blocks(rng, 4), acq)
+    h.release(acq)
+    acq2 = h.acquire(toks)
+    assert acq2.reuse_tokens == 16
+    assert acq2.device_tokens == 16  # still hot
+    h.release(acq2)
+    assert h.hit_rate > 0
+
+
+def test_demotion_to_host_then_disk(tmp_path):
+    h = _hier(tmp_path, dev=2, host=2)
+    rng = np.random.default_rng(1)
+    seqs = [list(range(i * 100, i * 100 + 8)) for i in range(4)]
+    for s in seqs:
+        acq = h.acquire(s)
+        h.commit(s, _blocks(rng, 2), acq)
+        h.release(acq)
+    counts = h.tree.count_by_tier()
+    assert counts[TIER_DEVICE] <= 2
+    assert counts[TIER_HOST] <= 2
+    assert counts[TIER_DISK] >= 1  # overflow hit the disk tier
+    # oldest sequence must still be reusable via disk
+    acq = h.acquire(seqs[0])
+    assert acq.reuse_tokens == 8
+    assert acq.disk_tokens > 0 or acq.host_tokens > 0
+    h.release(acq)
+
+
+def test_disk_extension_beyond_memory(tmp_path):
+    """Blocks that never entered this tree instance (e.g. from a previous
+    process) are found via store.probe — the drop-in integration of §3.2."""
+    store = KVBlockStore(str(tmp_path / "kvs"), block_size=B, buffer_bytes=1 << 16,
+                         codec=BatchCodec(CODEC_RAW, use_zlib=False))
+    rng = np.random.default_rng(2)
+    toks = list(range(32))
+    store.put_batch(toks, _blocks(rng, 8))
+    h = CacheHierarchy(B, 16, 16, store=store)
+    acq = h.acquire(toks)
+    assert acq.reuse_tokens == 32  # all from disk, promoted
+    assert acq.disk_tokens == 32
+    h.release(acq)
+    acq2 = h.acquire(toks)
+    assert acq2.device_tokens == 32  # now hot
+    h.release(acq2)
+
+
+def test_memory_only_drops_blocks(tmp_path):
+    h = _hier(tmp_path, dev=2, host=2, store=False)
+    rng = np.random.default_rng(3)
+    seqs = [list(range(i * 100, i * 100 + 8)) for i in range(4)]
+    for s in seqs:
+        acq = h.acquire(s)
+        h.commit(s, _blocks(rng, 2), acq)
+        h.release(acq)
+    assert h.stats.drops > 0
+    acq = h.acquire(seqs[0])
+    assert acq.reuse_tokens < 8  # (partially) lost without a disk tier
+    h.release(acq)
+
+
+def test_locked_paths_survive_pressure(tmp_path):
+    h = _hier(tmp_path, dev=2, host=1)
+    rng = np.random.default_rng(4)
+    t1 = list(range(8))
+    acq1 = h.acquire(t1)
+    h.commit(t1, _blocks(rng, 2), acq1)
+    # do NOT release; pressure from another sequence
+    acq1b = h.acquire(t1)  # locks the path
+    t2 = list(range(100, 108))
+    acq2 = h.acquire(t2)
+    h.commit(t2, _blocks(rng, 2), acq2)
+    # locked path must still be device-resident
+    assert all(n.tier == TIER_DEVICE for n in acq1b.nodes)
+    h.release(acq1b)
+    h.release(acq1)
+    h.release(acq2)
+
+
+def test_write_through_persists_across_restart(tmp_path):
+    rng = np.random.default_rng(5)
+    toks = list(range(16))
+    h = _hier(tmp_path, write_through=True)
+    acq = h.acquire(toks)
+    h.commit(toks, _blocks(rng, 4), acq)
+    h.release(acq)
+    h.store.close()
+    # new process: fresh tree, same disk
+    store2 = KVBlockStore(str(tmp_path / "kvs"), block_size=B, buffer_bytes=1 << 16,
+                          codec=BatchCodec(CODEC_RAW, use_zlib=False))
+    h2 = CacheHierarchy(B, 8, 8, store=store2)
+    acq2 = h2.acquire(toks)
+    assert acq2.reuse_tokens == 16
+    h2.release(acq2)
+    store2.close()

