@@ -20,6 +20,7 @@ from repro.cache.hierarchy import CacheHierarchy
 from repro.configs import get_config
 from repro.core.baselines import FilePerObjectStore, MemoryOnlyStore
 from repro.core.codec import CODEC_INT8, CODEC_RAW, BatchCodec
+from repro.core.sharded_store import ShardedKVBlockStore
 from repro.core.store import KVBlockStore
 from repro.serving import ComputeModel, ServingEngine
 from repro.workload import PAPER_STAGES, StagedWorkload
@@ -69,6 +70,21 @@ def make_backend(root: str, kind: str, s: BenchScale, adaptive: bool = True):
             controller_window=window,
         )
         store.controller.min_ops_between_tunings = window // 4
+        return store
+    if kind == "lsm-sharded":
+        window = max(256, s.requests_per_stage * (s.prompt_len // s.block_size) // 2)
+        store = ShardedKVBlockStore(
+            os.path.join(root, "lsm_sharded"),
+            n_shards=4,
+            block_size=s.block_size,
+            codec=BatchCodec(CODEC_INT8, use_zlib=True),
+            budget_bytes=disk,
+            adaptive=adaptive,
+            controller_window=window,
+        )
+        for shard in store.shards:
+            # per-shard window was scaled down by 1/n_shards in the store
+            shard.controller.min_ops_between_tunings = max(64, shard.controller.window // 4)
         return store
     if kind == "file":
         # file-per-object stores raw tensors (per-object compression defeats

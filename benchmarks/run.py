@@ -55,6 +55,10 @@ def main(argv=None):
         from . import store_scalability
 
         store_scalability.run(n_batches=24 if args.quick else 60)
+        store_scalability.shard_sweep(
+            shard_counts=(1, 4) if args.quick else (1, 2, 4, 8),
+            n_batches=48 if args.quick else 128,
+        )
 
     if "store_ops" not in skip:
         print("\n[5/7] store_ops (paper App. B: put/probe/get micro) ...")

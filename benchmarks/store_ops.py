@@ -1,8 +1,10 @@
 """Paper Appendix B: store-operation microbenchmarks — put_batch / probe /
-get_batch latency vs batch size, plus Bloom-filter probe pruning."""
+get_batch latency vs batch size, plus Bloom-filter probe pruning — for the
+monolithic ``KVBlockStore`` and the 4-way ``ShardedKVBlockStore``."""
 
 from __future__ import annotations
 
+import argparse
 import os
 import tempfile
 import time
@@ -10,21 +12,30 @@ import time
 import numpy as np
 
 from repro.core.codec import CODEC_INT8, BatchCodec
+from repro.core.sharded_store import ShardedKVBlockStore
 from repro.core.store import KVBlockStore
 
 from . import common
 
 
-def run(verbose=True):
-    root = tempfile.mkdtemp(prefix="storeops_")
-    store = KVBlockStore(os.path.join(root, "s"), block_size=16,
-                         codec=BatchCodec(CODEC_INT8, use_zlib=True))
+def _mk_store(backend: str, root: str):
+    codec = BatchCodec(CODEC_INT8, use_zlib=True)
+    if backend == "lsm-sharded":
+        return ShardedKVBlockStore(os.path.join(root, "s"), n_shards=4, block_size=16, codec=codec)
+    if backend == "lsm":
+        return KVBlockStore(os.path.join(root, "s"), block_size=16, codec=codec)
+    raise ValueError(f"unknown backend {backend!r} (choose 'lsm' or 'lsm-sharded')")
+
+
+def run_backend(backend: str, batch_sizes=(1, 4, 16, 64), verbose=True):
+    root = tempfile.mkdtemp(prefix=f"storeops_{backend}_")
+    store = _mk_store(backend, root)
     rng = np.random.default_rng(0)
     template = rng.standard_normal((16, 512)).astype(np.float16)
     out = {"put": {}, "get": {}, "probe": {}}
 
     seqs = {}
-    for nb in (1, 4, 16, 64):
+    for nb in batch_sizes:
         tokens = rng.integers(0, 50000, size=nb * 16).tolist()
         seqs[nb] = tokens
         t0 = time.perf_counter()
@@ -39,12 +50,13 @@ def run(verbose=True):
         assert len(got) == nb
 
     # probe: hit vs guaranteed-miss (Bloom should prune the misses)
-    hit_tokens = seqs[64]
-    miss_tokens = rng.integers(50001, 99999, size=64 * 16).tolist()
+    big = max(batch_sizes)
+    hit_tokens = seqs[big]
+    miss_tokens = rng.integers(50001, 99999, size=big * 16).tolist()
     t0 = time.perf_counter()
     n = store.probe(hit_tokens)
     out["probe"]["hit_ms"] = (time.perf_counter() - t0) * 1e3
-    assert n == 64 * 16
+    assert n == big * 16
     lk0 = store.stats.probe_lookups
     t0 = time.perf_counter()
     n = store.probe(miss_tokens)
@@ -52,16 +64,33 @@ def run(verbose=True):
     out["probe"]["miss_lookups"] = store.stats.probe_lookups - lk0
     assert n == 0
     out["compression_ratio"] = store.stats.compression_ratio
+    out["files"] = store.file_count
 
     if verbose:
-        print("put_batch ms:", {k: round(v, 2) for k, v in out["put"].items()})
-        print("get_batch ms:", {k: round(v, 2) for k, v in out["get"].items()})
-        print("probe:", {k: (round(v, 3) if isinstance(v, float) else v) for k, v in out["probe"].items()})
-        print(f"compression ratio: {out['compression_ratio']:.2f}x")
+        print(f"[{backend}]")
+        print("  put_batch ms:", {k: round(v, 2) for k, v in out["put"].items()})
+        print("  get_batch ms:", {k: round(v, 2) for k, v in out["get"].items()})
+        print("  probe:", {k: (round(v, 3) if isinstance(v, float) else v) for k, v in out["probe"].items()})
+        print(f"  compression ratio: {out['compression_ratio']:.2f}x, files: {out['files']}")
     store.close()
+    return out
+
+
+def run(verbose=True, backends=("lsm", "lsm-sharded"), batch_sizes=(1, 4, 16, 64)):
+    out = {b: run_backend(b, batch_sizes=batch_sizes, verbose=verbose) for b in backends}
     common.save_artifact("store_ops", out)
     return out
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke: smaller batches")
+    ap.add_argument("--backends", nargs="*", default=["lsm", "lsm-sharded"],
+                    choices=["lsm", "lsm-sharded"])
+    args = ap.parse_args(argv)
+    sizes = (1, 4, 16) if args.quick else (1, 4, 16, 64)
+    run(backends=tuple(args.backends), batch_sizes=sizes)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -2,17 +2,23 @@
 (severe metadata overhead, write anomalies ~7M files); SGLANG-LSM bounds
 file counts.
 
-Two measurements:
+Three measurements:
   1. REAL: per-operation latency + file count + physical footprint as both
      backends ingest the same KV stream (container scale: up to ~50k
      objects — enough to show the latency/footprint curves diverging).
   2. MODELED: extrapolation of the measured per-file overhead curve to the
      paper's 7M-file regime (methodology per DESIGN.md §7 — creating 7M
      real files is out of budget for this container).
+  3. SHARD SWEEP (``--shards 1 2 4 8``): the same ingest stream through a
+     monolithic ``KVBlockStore`` (1 shard) and ``ShardedKVBlockStore`` at
+     increasing shard counts, reporting aggregate ingest/read throughput,
+     LSM write amplification, and per-shard file counts — the scaling axis
+     the ROADMAP's "production-scale traffic" target rests on.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import tempfile
 import time
@@ -21,6 +27,7 @@ import numpy as np
 
 from repro.core.baselines import FilePerObjectStore, fs_footprint
 from repro.core.codec import CODEC_INT8, CODEC_RAW, BatchCodec
+from repro.core.sharded_store import ShardedKVBlockStore
 from repro.core.store import KVBlockStore
 
 from . import common
@@ -80,5 +87,110 @@ def run(n_batches: int = 60, blocks_per_batch: int = 64, verbose=True):
     return out
 
 
+# ------------------------------------------------------------- shard sweep
+def _mk_sharded(root: str, n_shards: int, block_tokens: int, buffer_bytes: int, **kw):
+    # zlib off: the sweep isolates storage-engine scalability (memtable,
+    # flush, compaction, log append); codec CPU is backend-invariant noise
+    codec = BatchCodec(CODEC_INT8, use_zlib=False)
+    if n_shards == 1:  # the monolithic baseline, not a 1-shard wrapper
+        return KVBlockStore(os.path.join(root, "s"), block_size=block_tokens,
+                            codec=codec, buffer_bytes=buffer_bytes, **kw)
+    return ShardedKVBlockStore(os.path.join(root, "s"), n_shards=n_shards,
+                               block_size=block_tokens, codec=codec,
+                               buffer_bytes=buffer_bytes, **kw)
+
+
+def shard_sweep(
+    shard_counts=(1, 2, 4, 8),
+    n_batches: int = 128,
+    blocks_per_batch: int = 32,
+    block_tokens: int = 16,
+    kv_bytes: int = 256,
+    buffer_bytes: int = 128 * 1024,
+    maintenance_every: int = 4,
+    repeats: int = 3,
+    verbose=True,
+):
+    """Same ingest stream through every shard count.  The stream is
+    pre-generated (byte-identical traffic per configuration); batches have
+    independent first blocks, so hash routing spreads them across shards.
+    Defaults put the engine under flush/compaction pressure (small buffer,
+    small payloads) — the regime where per-shard memtables, controllers,
+    and compaction trees pay off.
+
+    Configurations are interleaved across ``repeats`` rounds and the
+    best-of throughput is reported (standard microbenchmark practice:
+    max-throughput filters scheduler/IO noise, which on a shared container
+    can swing single runs severalfold)."""
+    rng = np.random.default_rng(0)
+    template = rng.standard_normal((block_tokens, kv_bytes // 2)).astype(np.float16)
+    stream = [
+        rng.integers(0, 50000, size=blocks_per_batch * block_tokens).tolist()
+        for _ in range(n_batches)
+    ]
+    total_blocks = n_batches * blocks_per_batch
+    out = {}
+    for rep in range(repeats):
+        for n in shard_counts:
+            root = tempfile.mkdtemp(prefix=f"scal_shards{n}_r{rep}_")
+            store = _mk_sharded(root, n, block_tokens, buffer_bytes)
+            t0 = time.perf_counter()
+            for b, tokens in enumerate(stream):
+                store.put_batch(tokens, [template] * blocks_per_batch)
+                if (b + 1) % maintenance_every == 0:
+                    store.maintenance()
+            store.flush()
+            ingest_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            hit_blocks = 0
+            for tokens in stream:
+                got = store.get_batch(tokens, store.probe(tokens))
+                hit_blocks += len(got)
+            read_s = time.perf_counter() - t0
+            per_shard_files = (
+                store.shard_file_counts() if isinstance(store, ShardedKVBlockStore) else [store.file_count]
+            )
+            rec = {
+                "shards": n,
+                "ingest_blocks_per_s": total_blocks / ingest_s,
+                "read_blocks_per_s": hit_blocks / max(1e-9, read_s),
+                "write_amplification": store.write_amplification,
+                "files_per_shard": per_shard_files,
+                "files_total": store.file_count,
+                "disk_bytes": store.disk_bytes,
+            }
+            store.close()
+            best = out.get(n)
+            if best is None or rec["ingest_blocks_per_s"] > best["ingest_blocks_per_s"]:
+                out[n] = rec
+    for n in shard_counts:
+        if verbose:
+            r = out[n]
+            print(f"shards={n} ingest {r['ingest_blocks_per_s']:8.0f} blk/s  "
+                  f"read {r['read_blocks_per_s']:8.0f} blk/s  "
+                  f"WA {r['write_amplification']:.2f}  files/shard {r['files_per_shard']}")
+    if verbose and 1 in out and 4 in out:
+        speedup = out[4]["ingest_blocks_per_s"] / out[1]["ingest_blocks_per_s"]
+        print(f"4-shard vs monolithic ingest: {speedup:.2f}x")
+    common.save_artifact("store_scalability_shards", out)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, nargs="*", default=None,
+                    help="shard counts to sweep (e.g. --shards 1 2 4 8); "
+                         "omit to run the backend comparison only")
+    ap.add_argument("--n-batches", type=int, default=60)
+    ap.add_argument("--blocks-per-batch", type=int, default=64)
+    ap.add_argument("--skip-backends", action="store_true",
+                    help="skip the lsm-vs-file comparison")
+    args = ap.parse_args(argv)
+    if not args.skip_backends:
+        run(n_batches=args.n_batches, blocks_per_batch=args.blocks_per_batch)
+    if args.shards:
+        shard_sweep(shard_counts=tuple(args.shards))
+
+
 if __name__ == "__main__":
-    run()
+    main()

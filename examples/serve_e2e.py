@@ -2,7 +2,8 @@
 with batched requests through the full stack —
 
     staged workload -> ServingEngine -> CacheHierarchy (radix + tiers)
-                    -> KVBlockStore (LSM index + tensor log, real disk)
+                    -> ShardedKVBlockStore (N independent LSM shards,
+                       real disk; any StorageBackend slots in here)
                     -> real prefill/decode on the smoke model
 
 KV blocks written to / promoted from the disk tier are the model's actual
@@ -20,7 +21,7 @@ import numpy as np
 
 from repro.cache.hierarchy import CacheHierarchy
 from repro.configs import get_config
-from repro.core.store import KVBlockStore
+from repro.core.sharded_store import ShardedKVBlockStore
 from repro.models import api
 from repro.serving import ComputeModel, ServingEngine
 from repro.workload import StagedWorkload
@@ -29,6 +30,7 @@ ARCH = "qwen3-14b"
 BLOCK = 16
 PROMPT = 128
 DECODE_TOKENS = 8
+N_SHARDS = 4
 
 cfg = get_config(ARCH, smoke=True)
 params = api.init_params(cfg, jax.random.key(0))
@@ -60,7 +62,7 @@ def real_prefill(tokens, reused):
 
 
 def main():
-    store = KVBlockStore(tempfile.mkdtemp(prefix="serve_e2e_"), block_size=BLOCK)
+    store = ShardedKVBlockStore(tempfile.mkdtemp(prefix="serve_e2e_"), n_shards=N_SHARDS, block_size=BLOCK)
     h = CacheHierarchy(BLOCK, device_budget_blocks=64, host_budget_blocks=128, store=store)
     eng = ServingEngine(h, ComputeModel(cfg), kv_bytes_per_token=kv_per_tok_elems * 2,
                         max_batch_tokens=2048, real_prefill=real_prefill)
@@ -93,8 +95,9 @@ def main():
         last = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
         out.append(int(last[0, 0]))
     print(f"decoded {DECODE_TOKENS} tokens: {out}")
-    print(f"store: files={store.file_count} bytes={store.disk_bytes} "
-          f"compression={store.stats.compression_ratio:.2f}x hit-tiers d/h/d={h.stats.tokens_hit_device}/"
+    print(f"store: shards={store.n_shards} files/shard={store.shard_file_counts()} "
+          f"bytes={store.disk_bytes} compression={store.stats.compression_ratio:.2f}x "
+          f"hit-tiers d/h/d={h.stats.tokens_hit_device}/"
           f"{h.stats.tokens_hit_host}/{h.stats.tokens_hit_disk}")
     store.close()
     print("ok")

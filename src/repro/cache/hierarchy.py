@@ -1,5 +1,8 @@
 """Hierarchical KV-cache manager: radix tree + device/host memory tiers +
-a pluggable disk backend (``KVBlockStore`` or one of the paper's baselines).
+a pluggable disk backend (any ``repro.core.backend.StorageBackend``:
+``KVBlockStore``, ``ShardedKVBlockStore``, or one of the paper's
+baselines).  This layer depends only on the protocol — backend choice is
+a constructor argument.
 
 This is the integration point the paper describes in §3.2: the in-memory
 radix tree and RadixAttention logic are preserved; only the disk backend
@@ -16,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.backend import StorageBackend
 from .radix import (
     TIER_DEVICE,
     TIER_DISK,
@@ -60,7 +64,7 @@ class CacheHierarchy:
         block_size: int,
         device_budget_blocks: int,
         host_budget_blocks: int,
-        store=None,  # disk backend (KVBlockStore / FilePerObjectStore / None)
+        store: Optional[StorageBackend] = None,  # disk backend, or None (memory-only)
         write_through: bool = True,
     ):
         self.tree = RadixTree(block_size)

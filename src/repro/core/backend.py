@@ -1,0 +1,84 @@
+"""``StorageBackend`` — the storage contract of the reproduction.
+
+Every disk/memory backend (``KVBlockStore``, ``ShardedKVBlockStore``,
+``FilePerObjectStore``, ``MemoryOnlyStore``) satisfies this protocol, and
+the layers above storage — ``cache.hierarchy.CacheHierarchy``,
+``serving.engine.ServingEngine``, the workload drivers and benchmarks —
+depend only on it.  Swapping the engine's disk tier is a constructor
+argument, never a code change.
+
+The contract (paper §3.2, Fig. 6):
+
+    put_batch(tokens, blocks, start_block, skip_existing) -> n_written
+    probe(tokens) -> n_tokens        longest *contiguous* cached prefix
+    get_batch(tokens, n_tokens)      blocks covering tokens[:n_tokens]
+    maintenance(compact_steps)       one scheduled maintenance cycle
+    flush() / close()                durability / lifecycle
+    stats / disk_bytes / file_count  observability
+
+Invariants every backend must keep:
+  * ``probe`` never promises tokens ``get_batch`` would truncate — it
+    reports a contiguous, immediately readable prefix;
+  * ``put_batch`` keys block ``i`` by the whole token prefix through block
+    ``i`` (content addressing), so identical prefixes dedup across requests;
+  * ``maintenance`` is deterministic and caller-scheduled (no background
+    threads), so tests and benchmarks control when compaction work happens.
+"""
+
+from __future__ import annotations
+
+from dataclasses import fields
+from typing import Iterable, List, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .store import StoreStats
+
+
+@runtime_checkable
+class StorageBackend(Protocol):
+    """Structural protocol for KV-cache storage backends.
+
+    ``runtime_checkable`` supports ``isinstance`` conformance checks in
+    tests; static checkers verify the full signatures.
+    """
+
+    name: str
+    block_size: int
+
+    def put_batch(
+        self,
+        tokens: Sequence[int],
+        blocks: Sequence[np.ndarray],
+        start_block: int = 0,
+        skip_existing: bool = True,
+    ) -> int: ...
+
+    def probe(self, tokens: Sequence[int]) -> int: ...
+
+    def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]: ...
+
+    def maintenance(self, compact_steps: int = 8) -> dict: ...
+
+    def flush(self) -> None: ...
+
+    def close(self) -> None: ...
+
+    @property
+    def stats(self) -> StoreStats: ...
+
+    @property
+    def disk_bytes(self) -> int: ...
+
+    @property
+    def file_count(self) -> int: ...
+
+
+def merge_stats(parts: Iterable[StoreStats]) -> StoreStats:
+    """Aggregate per-shard ``StoreStats`` into one view (all fields are
+    additive counters/timers)."""
+    out = StoreStats()
+    for s in parts:
+        for f in fields(StoreStats):
+            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+    return out

@@ -11,8 +11,10 @@
   (models HBM+DRAM capacity, which forces the evictions the paper
   describes).
 
-Both expose the ``put_batch / probe / get_batch / maintenance`` contract of
-``KVBlockStore`` so the serving engine and benchmarks are backend-agnostic.
+Both satisfy the ``repro.core.backend.StorageBackend`` protocol — including
+its probe invariant (a probe reports a *contiguous* readable prefix, even
+after LRU eviction punches holes mid-prefix) — so the hierarchy, serving
+engine, and benchmarks are backend-agnostic.
 """
 
 from __future__ import annotations
@@ -70,6 +72,9 @@ class FilePerObjectStore:
         self.fs_bytes = 0
         self.stats = StoreStats()
         self.modeled_penalty_s = 0.0
+        # holes mid-prefix only appear after an eviction or a refused write
+        # (max_files wall); until then probe stays O(log n)
+        self._may_have_holes = False
         self._recover()
 
     def _recover(self) -> None:
@@ -107,6 +112,7 @@ class FilePerObjectStore:
                 continue
             if self.max_files is not None and len(self._lru) >= self.max_files:
                 # the §4.2 wall: filesystem refuses/degrades past the file cap
+                self._may_have_holes = True  # a later block may still land
                 continue
             payload = self.codec.encode(np.asarray(block))
             os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -138,6 +144,19 @@ class FilePerObjectStore:
                 lo = mid
             else:
                 hi = mid - 1
+        # LRU eviction (budget) and refused writes (max_files wall) punch
+        # holes mid-prefix; confirm contiguity so probe matches what
+        # get_batch can actually return.  Until a hole can exist, probe
+        # keeps the pure O(log n) binary search.
+        if lo and self._may_have_holes:
+            k = 0
+            while k < lo:
+                self._charge_meta()
+                self.stats.probe_lookups += 1
+                if not os.path.exists(self._path(tokens, (k + 1) * B)):
+                    break
+                k += 1
+            lo = k
         if lo == 0:
             self.stats.probe_empty += 1
         else:
@@ -163,6 +182,7 @@ class FilePerObjectStore:
 
     def _evict_to_budget(self) -> None:
         while self.fs_bytes > self.budget_bytes and self._lru:
+            self._may_have_holes = True
             path, fp = self._lru.popitem(last=False)
             try:
                 os.remove(path)
@@ -202,6 +222,7 @@ class MemoryOnlyStore:
         self._lru: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
         self.bytes = 0
         self.stats = StoreStats()
+        self._may_have_holes = False  # set on first LRU eviction
 
     def _key(self, tokens, n_tokens: int) -> bytes:
         return encode_tokens(tokens[:n_tokens])
@@ -224,6 +245,7 @@ class MemoryOnlyStore:
             self.stats.payload_bytes_stored += arr.nbytes
             wrote += 1
         while self.bytes > self.budget_bytes and self._lru:
+            self._may_have_holes = True
             _, old = self._lru.popitem(last=False)
             self.bytes -= old.nbytes
             self.stats.evicted_blocks += 1
@@ -242,6 +264,13 @@ class MemoryOnlyStore:
                 lo = mid
             else:
                 hi = mid - 1
+        # confirm contiguity once LRU eviction can have punched holes
+        # (protocol invariant: probe never promises what get_batch lacks)
+        if lo and self._may_have_holes:
+            k = 0
+            while k < lo and self._key(tokens, (k + 1) * B) in self._lru:
+                k += 1
+            lo = k
         if lo == 0:
             self.stats.probe_empty += 1
         else:

@@ -99,6 +99,12 @@ class KVBlockStore:
             self.index, window=controller_window, entry_bytes=ENTRY_BYTES, enabled=adaptive
         )
         self.stats = StoreStats()
+        # File eviction is the only operation that breaks prefix-closure
+        # (holes mid-prefix); the marker persists that fact across reopens
+        # so probe only pays contiguity verification on stores where holes
+        # can actually exist.
+        self._holes_marker = os.path.join(root, "evicted.marker")
+        self._may_have_holes = os.path.exists(self._holes_marker)
 
     # ------------------------------------------------------------------ keys
     def _key(self, tokens: Sequence[int], n_tokens: int) -> bytes:
@@ -174,11 +180,44 @@ class KVBlockStore:
                 lo = mid
             else:
                 hi = mid - 1
+        if lo and self._may_have_holes:
+            # Binary search assumes prefix-closure (block k present => blocks
+            # 1..k-1 present), but FIFO file eviction tombstones whole files
+            # regardless of prefix position, punching holes mid-prefix.  One
+            # index range scan confirms the contiguous prefix so probe never
+            # promises tokens get_batch would then truncate.  Skipped until
+            # the first eviction: hole-free stores keep the pure O(log n)
+            # Bloom-pruned probe.
+            lo = self._contiguous_blocks(tokens, lo)
         if lo == 0:
             self.stats.probe_empty += 1
         else:
             self.stats.probe_hits += 1
         return lo * B
+
+    def _scan_block_ptrs(self, tokens: Sequence[int], n_blocks: int) -> List[Optional[LogPointer]]:
+        """One index range scan over blocks 1..n_blocks; ``ptrs[i]`` is None
+        when block ``i+1`` is absent.  Shared by ``get_batch`` and probe's
+        contiguity verification so the two can never disagree on presence."""
+        B = self.block_size
+        start = self._key(tokens, B)
+        end = self._key(tokens, n_blocks * B) + b"\x00"
+        wanted: Dict[bytes, int] = {self._key(tokens, (i + 1) * B): i for i in range(n_blocks)}
+        ptrs: List[Optional[LogPointer]] = [None] * n_blocks
+        for k, v in self.index.range(start, end):
+            idx = wanted.get(k)
+            if idx is not None:
+                ptrs[idx] = self._unpack_value(v)
+        self.controller.record(OP_RANGE, 1)
+        return ptrs
+
+    def _contiguous_blocks(self, tokens: Sequence[int], n_blocks: int) -> int:
+        """Largest k <= n_blocks such that blocks 1..k are all indexed."""
+        ptrs = self._scan_block_ptrs(tokens, n_blocks)
+        k = 0
+        while k < n_blocks and ptrs[k] is not None:
+            k += 1
+        return k
 
     # ------------------------------------------------------------------- get
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
@@ -189,15 +228,7 @@ class KVBlockStore:
         if n_blocks == 0:
             return []
         t0 = time.perf_counter()
-        start = self._key(tokens, B)
-        end = self._key(tokens, n_blocks * B) + b"\x00"
-        wanted: Dict[bytes, int] = {self._key(tokens, (i + 1) * B): i for i in range(n_blocks)}
-        ptrs: List[Optional[LogPointer]] = [None] * n_blocks
-        for k, v in self.index.range(start, end):
-            idx = wanted.get(k)
-            if idx is not None:
-                ptrs[idx] = self._unpack_value(v)
-        self.controller.record(OP_RANGE, 1)
+        ptrs = self._scan_block_ptrs(tokens, n_blocks)
         present = [(i, p) for i, p in enumerate(ptrs) if p is not None]
         blocks: List[Optional[np.ndarray]] = [None] * n_blocks
         if present:
@@ -230,21 +261,33 @@ class KVBlockStore:
             rep["evicted_files"] = self._evict_to_budget()
         return rep
 
+    def evict_oldest_file(self) -> bool:
+        """Drop the oldest tensor-log file and tombstone its index entries
+        (the unit of FIFO eviction; ``ShardedKVBlockStore`` drives this
+        directly to enforce a global budget across shards).  Returns False
+        when only the active file remains."""
+        if self.log.file_count <= 1:
+            return False
+        if not self._may_have_holes:
+            self._may_have_holes = True
+            open(self._holes_marker, "w").close()
+        fid = self.log.file_ids()[0]
+        keys = [key for _, key, _ in self.log.scan_file(fid)]
+        for key in keys:
+            found, v = self.index.get(key)
+            if found and self._unpack_value(v).file_id == fid:
+                self.index.delete(key)
+                self.stats.evicted_blocks += 1
+        self.log.remove_file(fid)
+        return True
+
     def _evict_to_budget(self) -> int:
         """FIFO file eviction: oldest tensor-log files are dropped (their
         index entries tombstoned) until under budget.  Hot data survives
         because the merge service continuously rewrites live records into
         young files (WiscKey-style age segregation)."""
         evicted = 0
-        while self.disk_bytes > self.budget_bytes and self.log.file_count > 1:
-            fid = self.log.file_ids()[0]
-            keys = [key for _, key, _ in self.log.scan_file(fid)]
-            for key in keys:
-                found, v = self.index.get(key)
-                if found and self._unpack_value(v).file_id == fid:
-                    self.index.delete(key)
-                    self.stats.evicted_blocks += 1
-            self.log.remove_file(fid)
+        while self.disk_bytes > self.budget_bytes and self.evict_oldest_file():
             evicted += 1
         return evicted
 
@@ -257,8 +300,18 @@ class KVBlockStore:
     def file_count(self) -> int:
         return self.log.file_count + self.index.n_runs
 
+    @property
+    def write_amplification(self) -> float:
+        return self.index.stats.write_amplification
+
     def flush(self) -> None:
         self.index.flush()
+        self.log.sync()
+
+    def sync_wal(self) -> None:
+        """Durability point without a memtable flush: WAL + tensor log hit
+        disk, so recovery replays the index from the WAL."""
+        self.index.wal.sync()
         self.log.sync()
 
     def close(self) -> None:

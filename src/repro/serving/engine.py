@@ -18,8 +18,9 @@ Production concerns implemented here:
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -45,6 +46,10 @@ class EngineStats:
     hedged_reads: int = 0
     redispatches: int = 0
     maintenance_runs: int = 0
+    # aggregated from backend maintenance reports; a sharded backend sums
+    # these across the shards each cycle touched
+    maintenance_compactions: int = 0
+    evicted_files: int = 0
 
     ttfts: List[float] = field(default_factory=list)
     hits: List[float] = field(default_factory=list)
@@ -77,7 +82,7 @@ class ServingEngine:
         self.maintenance_every = maintenance_every
         self.real_prefill = real_prefill  # (tokens, reused) -> (blocks, seconds)
         self.stats = EngineStats()
-        self._queue: List = []
+        self._queue: Deque = deque()  # popleft is O(1); list.pop(0) was O(n)
         self._batches = 0
         self._ewma_read_s: float = 0.0
         self._block_template: Optional[np.ndarray] = None
@@ -97,16 +102,18 @@ class ServingEngine:
         budget, serve each (acquire -> prefill -> commit), run maintenance."""
         batch, tokens = [], 0
         while self._queue and tokens + len(self._queue[0].tokens) <= self.max_batch_tokens:
-            r = self._queue.pop(0)
+            r = self._queue.popleft()
             batch.append(r)
             tokens += len(r.tokens)
         if not batch and self._queue:  # oversized single request
-            batch.append(self._queue.pop(0))
+            batch.append(self._queue.popleft())
         records = [self._serve_one(r) for r in batch]
         self._batches += 1
         if self._batches % self.maintenance_every == 0:
-            self.h.maintenance()
+            rep = self.h.maintenance()
             self.stats.maintenance_runs += 1
+            self.stats.maintenance_compactions += int(rep.get("compactions", 0) or 0)
+            self.stats.evicted_files += int(rep.get("evicted_files", 0) or 0)
         return records
 
     # ------------------------------------------------------------- serving

@@ -1,1 +1,6 @@
-from .staged import PAPER_STAGES, Request, StagedWorkload  # noqa: F401
+from .staged import (  # noqa: F401
+    PAPER_STAGES,
+    MultiTenantWorkload,
+    Request,
+    StagedWorkload,
+)

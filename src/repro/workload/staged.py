@@ -79,3 +79,80 @@ class StagedWorkload:
 
     def stage_requests(self, stage_idx: int) -> List[Request]:
         return [self._make_request(stage_idx, self.stages[stage_idx]) for _ in range(self.requests_per_stage)]
+
+
+@dataclass
+class MultiTenantWorkload:
+    """M independent tenants, each with its own prefix corpus, interleaved
+    round-robin — the traffic shape storage sharding exists for: M disjoint
+    prefix keyspaces that a monolithic store serializes behind one memtable
+    and WAL, but a ``ShardedKVBlockStore`` spreads across shards.
+
+    Every prompt of tenant ``t`` starts with a tenant-tag block
+    (``block_size`` copies of a token unique to ``t``, drawn from above the
+    vocab range), so tenants never share a first block: hash routing keeps
+    each tenant's whole prefix tree shard-local while distributing tenants
+    across shards.  ``prompt_len`` includes the tag block."""
+
+    n_tenants: int = 4
+    prompt_len: int = 4096
+    requests_per_stage: int = 1000  # total per stage, round-robin over tenants
+    stages: Sequence[float] = PAPER_STAGES
+    vocab: int = 50_000
+    block_size: int = 16
+    corpus_size: int = 128  # distinct shared-prefix roots per tenant
+    seed: int = 0
+
+    def __post_init__(self):
+        body = self.prompt_len - self.block_size
+        if body <= 0:
+            raise ValueError("prompt_len must exceed block_size (tag block)")
+        self.tenants = [
+            StagedWorkload(
+                prompt_len=body,
+                requests_per_stage=self.requests_per_stage,
+                stages=self.stages,
+                vocab=self.vocab,
+                block_size=self.block_size,
+                corpus_size=self.corpus_size,
+                seed=self.seed + 7919 * (t + 1),
+            )
+            for t in range(self.n_tenants)
+        ]
+        self._rid = 0
+
+    def tag_block(self, tenant: int) -> List[int]:
+        return [self.vocab + tenant] * self.block_size
+
+    def _wrap(self, tenant: int, req: Request) -> Request:
+        self._rid += 1
+        toks = self.tag_block(tenant) + req.tokens
+        # the tag block always hits after warmup; fold it into the expectation
+        hit = (self.block_size + req.expected_hit * (self.prompt_len - self.block_size)) / self.prompt_len
+        return Request(self._rid, req.stage, toks, hit)
+
+    # ------------------------------------------------------------- warmup
+    def warmup_prompts(self, total_tokens: int) -> Iterator[List[int]]:
+        """Tagged prompts covering every tenant's corpus round-robin until
+        ~``total_tokens`` have been issued."""
+        issued = 0
+        i = 0
+        while issued < total_tokens:
+            t = i % self.n_tenants
+            corpus = self.tenants[t].corpus
+            p = self.tag_block(t) + list(corpus[(i // self.n_tenants) % len(corpus)])
+            yield p
+            issued += len(p)
+            i += 1
+
+    # ------------------------------------------------------------ requests
+    def stage_requests(self, stage_idx: int) -> List[Request]:
+        hit = self.stages[stage_idx]
+        return [
+            self._wrap(i % self.n_tenants, self.tenants[i % self.n_tenants]._make_request(stage_idx, hit))
+            for i in range(self.requests_per_stage)
+        ]
+
+    def requests(self) -> Iterator[Request]:
+        for si in range(len(self.stages)):
+            yield from self.stage_requests(si)

@@ -4,8 +4,7 @@ import os
 import random
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.bloom import BloomFilter
 from repro.core.costmodel import TreeShape, cost_terms, optimize

@@ -1,0 +1,197 @@
+"""ShardedKVBlockStore: routing stability, monolithic equivalence,
+round-robin maintenance, global budget eviction, aggregated stats, and the
+multi-tenant workload the shard axis exists for."""
+
+import numpy as np
+import pytest
+
+from repro.cache.hierarchy import CacheHierarchy
+from repro.core import KVBlockStore, ShardedKVBlockStore, shard_of
+from repro.workload import MultiTenantWorkload
+
+B = 4
+
+
+def _blocks(rng, n, kvdim=(2, 4)):
+    return [rng.standard_normal((kvdim[0], B, kvdim[1]), dtype=np.float32) for _ in range(n)]
+
+
+def _seqs(rng, n, max_blocks=6):
+    out = []
+    for _ in range(n):
+        nb = int(rng.integers(1, max_blocks + 1))
+        out.append([int(x) for x in rng.integers(0, 50_000, nb * B)])
+    return out
+
+
+# ---------------------------------------------------------------- routing
+def test_routing_is_stable_under_extension():
+    """Every extension of a prefix must land on the first block's shard —
+    prefix locality is what keeps probes and range scans shard-local."""
+    rng = np.random.default_rng(0)
+    for toks in _seqs(rng, 50):
+        base = shard_of(toks, B, 8)
+        ext = toks + [int(x) for x in rng.integers(0, 50_000, 3 * B)]
+        assert shard_of(ext, B, 8) == base
+
+
+def test_routing_spreads_distinct_heads():
+    rng = np.random.default_rng(1)
+    hits = {shard_of(toks, B, 4) for toks in _seqs(rng, 200)}
+    assert hits == {0, 1, 2, 3}  # 200 distinct first blocks cover 4 shards
+
+
+def test_sharded_matches_monolithic(tmp_path):
+    """Same operation sequence against both backends: identical probe
+    results and identical payloads back (the sharded store is a pure
+    partitioning of the keyspace, never a semantic change)."""
+    rng = np.random.default_rng(2)
+    mono = KVBlockStore(str(tmp_path / "mono"), block_size=B, buffer_bytes=4096)
+    shard = ShardedKVBlockStore(str(tmp_path / "shard"), n_shards=4, block_size=B, buffer_bytes=4096)
+    seqs = []
+    for i, toks in enumerate(_seqs(rng, 30)):
+        if seqs and rng.random() < 0.4:  # extend an existing prefix
+            parent = seqs[int(rng.integers(0, len(seqs)))]
+            toks = parent + [int(x) for x in rng.integers(0, 50_000, 2 * B)]
+        blocks = _blocks(rng, len(toks) // B)
+        assert mono.put_batch(toks, blocks) == shard.put_batch(toks, blocks)
+        seqs.append(toks)
+        if i % 5 == 0:
+            mono.maintenance()
+            shard.maintenance()
+    for toks in seqs:
+        n = mono.probe(toks)
+        assert shard.probe(toks) == n
+        got_m, got_s = mono.get_batch(toks, n), shard.get_batch(toks, n)
+        assert len(got_m) == len(got_s) == n // B
+        for a, b in zip(got_m, got_s):
+            np.testing.assert_array_equal(a, b)
+    mono.close()
+    shard.close()
+
+
+# ------------------------------------------------------------ maintenance
+def test_round_robin_maintenance_bounds_per_cycle_work(tmp_path):
+    s = ShardedKVBlockStore(str(tmp_path / "kvs"), n_shards=4, block_size=B,
+                            buffer_bytes=4096, shards_per_cycle=1)
+    touched = []
+    for _ in range(8):
+        rep = s.maintenance()
+        assert len(rep["shards"]) == 1  # exactly one shard per cycle
+        touched.extend(rep["shards"].keys())
+    assert touched == [0, 1, 2, 3, 0, 1, 2, 3]  # round-robin, no starvation
+    s.close()
+
+
+def test_global_budget_drains_heaviest_shard_first(tmp_path):
+    s = ShardedKVBlockStore(str(tmp_path / "kvs"), n_shards=4, block_size=B,
+                            buffer_bytes=2048, vlog_file_bytes=2048,
+                            budget_bytes=60_000)
+    rng = np.random.default_rng(3)
+    for _ in range(80):
+        toks = [int(x) for x in rng.integers(0, 100_000, 4 * B)]
+        s.put_batch(toks, _blocks(rng, 4, kvdim=(2, 16)))
+        s.maintenance()
+    assert s.disk_bytes <= 60_000 + 4 * 2048  # budget + per-shard active-file slack
+    assert s.stats.evicted_blocks > 0
+    s.close()
+
+
+# ----------------------------------------------------------------- stats
+def test_stats_aggregate_across_shards(tmp_path):
+    s = ShardedKVBlockStore(str(tmp_path / "kvs"), n_shards=4, block_size=B, buffer_bytes=4096)
+    rng = np.random.default_rng(4)
+    seqs = _seqs(rng, 40, max_blocks=3)
+    total_put = sum(s.put_batch(toks, _blocks(rng, len(toks) // B)) for toks in seqs)
+    for toks in seqs:
+        s.probe(toks)
+    agg = s.stats
+    assert agg.put_blocks == total_put == sum(st.put_blocks for st in s.per_shard_stats().values())
+    assert agg.probes == len(seqs)
+    assert sum(1 for n in s.shard_file_counts() if n) >= 2  # data actually spread
+    s.close()
+
+
+def test_reopen_validates_routing_params(tmp_path):
+    root = str(tmp_path / "kvs")
+    s = ShardedKVBlockStore(root, n_shards=4, block_size=B)
+    s.close()
+    with pytest.raises(ValueError, match="orphan"):
+        ShardedKVBlockStore(root, n_shards=8, block_size=B)
+    with pytest.raises(ValueError, match="orphan"):  # block_size changes the hash too
+        ShardedKVBlockStore(root, n_shards=4, block_size=2 * B)
+    s2 = ShardedKVBlockStore(root, n_shards=4, block_size=B)
+    s2.close()
+
+
+def test_global_eviction_falls_through_stuck_shard(tmp_path):
+    """When the heaviest shard is down to its active file (unevictable),
+    eviction must continue with lighter shards instead of giving up."""
+    from repro.core import CODEC_RAW, BatchCodec
+
+    s = ShardedKVBlockStore(str(tmp_path / "kvs"), n_shards=2, block_size=B,
+                            buffer_bytes=4096, vlog_file_bytes=2048,
+                            codec=BatchCodec(CODEC_RAW, use_zlib=False))
+    rng = np.random.default_rng(6)
+
+    def toks_for(shard, nb=1):
+        while True:
+            t = [int(x) for x in rng.integers(0, 100_000, nb * B)]
+            if shard_of(t, B, 2) == shard:
+                return t
+
+    # shard 0: one 40KB block in a single (active) file — heaviest but stuck
+    s.put_batch(toks_for(0), [rng.standard_normal((2, B, 1280), dtype=np.float32)])
+    # shard 1: many small sealed files
+    for _ in range(20):
+        s.put_batch(toks_for(1), _blocks(rng, 1, kvdim=(2, 32)))
+    assert s.shards[0].disk_bytes > s.shards[1].disk_bytes
+    assert s.shards[1].log.file_count > 2
+    s.budget_bytes = s.shards[0].disk_bytes + 4096  # forces draining shard 1
+    evicted = s._evict_to_budget()
+    assert evicted > 0
+    assert s.disk_bytes <= s.budget_bytes
+    s.close()
+
+
+# ----------------------------------------------------- multi-tenant workload
+def test_multi_tenant_workload_shapes():
+    wl = MultiTenantWorkload(n_tenants=3, prompt_len=64, requests_per_stage=9,
+                             stages=(0.5,), block_size=B, corpus_size=4, seed=0)
+    reqs = wl.stage_requests(0)
+    assert len(reqs) == 9
+    tags = [r.tokens[0] for r in reqs]
+    assert set(tags) == {wl.vocab, wl.vocab + 1, wl.vocab + 2}  # interleaved
+    for r in reqs:
+        assert len(r.tokens) == 64
+        assert r.tokens[:B] == [r.tokens[0]] * B  # tag block
+    # tenants never share a first block -> disjoint keyspaces
+    assert len({tuple(r.tokens[:B]) for r in reqs}) == 3
+
+
+def test_multi_tenant_traffic_spreads_over_shards(tmp_path):
+    """End-to-end: M tenant corpora through hierarchy + sharded disk tier;
+    tenants populate multiple shards and later stages hit disk."""
+    store = ShardedKVBlockStore(str(tmp_path / "kvs"), n_shards=4, block_size=B, buffer_bytes=4096)
+    h = CacheHierarchy(B, device_budget_blocks=8, host_budget_blocks=8, store=store)
+    wl = MultiTenantWorkload(n_tenants=4, prompt_len=8 * B, requests_per_stage=8,
+                             stages=(0.5, 0.75), block_size=B, corpus_size=2, seed=1)
+    rng = np.random.default_rng(5)
+    for p in wl.warmup_prompts(wl.n_tenants * 2 * 8 * B):
+        acq = h.acquire(p)
+        nb = (len(p) - acq.reuse_tokens) // B
+        h.commit(p, _blocks(rng, nb), acq)
+        h.release(acq)
+        h.maintenance()
+    populated = sum(1 for n in store.shard_disk_bytes() if n)
+    assert populated >= 2  # 4 tenant tag-blocks spread over >= 2 of 4 shards
+    hits = 0
+    for si in range(2):
+        for r in wl.stage_requests(si):
+            acq = h.acquire(r.tokens)
+            hits += acq.reuse_tokens
+            nb = (len(r.tokens) - acq.reuse_tokens) // B
+            h.commit(r.tokens, _blocks(rng, nb), acq)
+            h.release(acq)
+    assert hits > 0
+    store.close()

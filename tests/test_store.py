@@ -6,8 +6,7 @@ import shutil
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import (
     CODEC_INT8,
@@ -16,9 +15,22 @@ from repro.core import (
     FilePerObjectStore,
     KVBlockStore,
     MemoryOnlyStore,
+    ShardedKVBlockStore,
+    StorageBackend,
 )
 from repro.core.baselines import fs_footprint
 from repro.core.controller import OP_EMPTY, OP_RANGE, OP_READ, OP_WRITE, AdaptiveController
+
+# The store contract suite runs against both the monolithic LSM store and
+# the 4-way sharded store: the sharded backend inherits every behavioral
+# guarantee (put/probe/get, crash recovery, budget eviction).
+STORE_KINDS = ["lsm", "sharded"]
+
+
+def _mk_store(kind, root, **kw):
+    if kind == "sharded":
+        return ShardedKVBlockStore(root, n_shards=4, **kw)
+    return KVBlockStore(root, **kw)
 
 
 # ------------------------------------------------------------------- codec
@@ -62,9 +74,9 @@ def _mk_blocks(rng, n, block, kvdim=(2, 4)):
     return [rng.standard_normal((kvdim[0], block, kvdim[1]), dtype=np.float32) for _ in range(n)]
 
 
-@pytest.fixture()
-def store(tmp_path):
-    s = KVBlockStore(str(tmp_path / "kvs"), block_size=4, buffer_bytes=4096)
+@pytest.fixture(params=STORE_KINDS)
+def store(tmp_path, request):
+    s = _mk_store(request.param, str(tmp_path / "kvs"), block_size=4, buffer_bytes=4096)
     yield s
     s.close()
 
@@ -92,6 +104,40 @@ def test_probe_partial_prefix(store):
     # completely cold request
     assert store.probe([1, 2, 3, 4, 5, 6, 7, 8]) == 0
     assert store.stats.probe_empty >= 1
+
+
+def test_probe_never_overreports_after_eviction_hole(store):
+    """FIFO file eviction tombstones whole files regardless of prefix
+    position; probe must report only the contiguous prefix get_batch can
+    actually return (regression: binary search alone over-reported)."""
+    rng = np.random.default_rng(11)
+    tokens = list(range(500, 532))  # 8 blocks of 4
+    blocks = _mk_blocks(rng, 8, 4)
+    target = store.shard_for(tokens) if isinstance(store, ShardedKVBlockStore) else store
+    # write block 3 alone into the first log file, then seal it so the
+    # eviction below removes exactly that mid-prefix block
+    store.put_batch(tokens, [blocks[2]], start_block=2)
+    target.log._files[target.log._active_id]["size"] = target.log.max_file_bytes
+    target.log._open_active()  # rotate: block 3's file is now the oldest
+    store.put_batch(tokens, blocks[:2], start_block=0)
+    store.put_batch(tokens, blocks[3:], start_block=3)
+    assert store.probe(tokens) == 32
+    assert target.evict_oldest_file()  # real eviction path: hole at block 3
+    n = store.probe(tokens)
+    got = store.get_batch(tokens, 32)
+    assert n == len(got) * 4 == 8  # promises exactly what get_batch delivers
+
+
+def test_backends_satisfy_storage_protocol(tmp_path):
+    backends = [
+        KVBlockStore(str(tmp_path / "a"), block_size=4),
+        ShardedKVBlockStore(str(tmp_path / "b"), n_shards=2, block_size=4),
+        FilePerObjectStore(str(tmp_path / "c"), block_size=4),
+        MemoryOnlyStore(budget_bytes=1 << 20, block_size=4),
+    ]
+    for b in backends:
+        assert isinstance(b, StorageBackend), b
+        b.close()
 
 
 def test_put_skips_existing(store):
@@ -148,17 +194,17 @@ def test_store_matches_oracle(tmp_path_factory, seed, nseq):
     s.close()
 
 
-def test_store_crash_recovery(tmp_path):
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_store_crash_recovery(tmp_path, kind):
     root = str(tmp_path / "kvs")
-    s = KVBlockStore(root, block_size=4, buffer_bytes=1 << 20, fsync=False)
+    s = _mk_store(kind, root, block_size=4, buffer_bytes=1 << 20, fsync=False)
     rng = np.random.default_rng(3)
     tokens = list(range(300, 332))
     blocks = _mk_blocks(rng, 8, 4)
     s.put_batch(tokens, blocks)
-    s.index.wal.sync()
-    s.log.sync()
+    s.sync_wal()
     del s  # crash: no close, memtable never flushed to SST
-    s2 = KVBlockStore(root, block_size=4, buffer_bytes=1 << 20)
+    s2 = _mk_store(kind, root, block_size=4, buffer_bytes=1 << 20)
     assert s2.probe(tokens) == 32
     got = s2.get_batch(tokens, 32)
     assert len(got) == 8
@@ -202,9 +248,10 @@ def test_tensor_file_merging_bounds_file_count(tmp_path):
     s.close()
 
 
-def test_budget_eviction(tmp_path):
-    s = KVBlockStore(
-        str(tmp_path / "kvs"), block_size=4, buffer_bytes=8192,
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_budget_eviction(tmp_path, kind):
+    s = _mk_store(
+        kind, str(tmp_path / "kvs"), block_size=4, buffer_bytes=8192,
         vlog_file_bytes=8192, budget_bytes=100_000,
     )
     rng = np.random.default_rng(6)
