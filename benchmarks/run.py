@@ -33,25 +33,25 @@ def main(argv=None):
     print("=" * 72)
 
     if "overall" not in skip:
-        print("\n[1/7] overall (paper Fig. 4: hit rate + TTFT, 3 backends) ...")
+        print("\n[1/8] overall (paper Fig. 4: hit rate + TTFT, 3 backends) ...")
         from . import overall
 
         overall.run(prompt_lens=(512,) if args.quick else (512, 1024), scale=scale)
 
     if "models_case" not in skip:
-        print("\n[2/7] models_case (paper Fig. 5a,b: per-model KV size sweep) ...")
+        print("\n[2/8] models_case (paper Fig. 5a,b: per-model KV size sweep) ...")
         from . import models_case
 
         models_case.run(scale=scale)
 
     if "dynamic_compaction" not in skip:
-        print("\n[3/7] dynamic_compaction (paper Fig. 5c: adaptive on/off) ...")
+        print("\n[3/8] dynamic_compaction (paper Fig. 5c: adaptive on/off) ...")
         from . import dynamic_compaction
 
         dynamic_compaction.run(scale=scale)
 
     if "store_scalability" not in skip:
-        print("\n[4/7] store_scalability (paper §4.2: file-count wall) ...")
+        print("\n[4/8] store_scalability (paper §4.2: file-count wall) ...")
         from . import store_scalability
 
         store_scalability.run(n_batches=24 if args.quick else 60)
@@ -61,22 +61,66 @@ def main(argv=None):
         )
 
     if "store_ops" not in skip:
-        print("\n[5/7] store_ops (paper App. B: put/probe/get micro) ...")
+        print("\n[5/8] store_ops (paper App. B: put/probe/get micro) ...")
         from . import store_ops
 
         store_ops.run()
 
     if "kernels_micro" not in skip:
-        print("\n[6/7] kernels_micro (Pallas kernels: HBM-traffic roofline) ...")
+        print("\n[6/8] kernels_micro (Pallas kernels: HBM-traffic roofline) ...")
         from . import kernels_micro
 
         kernels_micro.run()
 
     if "roofline" not in skip:
-        print("\n[7/7] roofline (dry-run artifacts -> three-term table) ...")
+        print("\n[7/8] roofline (dry-run artifacts -> three-term table) ...")
         from . import roofline
 
         roofline.run(pods=1)
+
+    if "runtime" not in skip:
+        print("\n[8/8] runtime (PR 4: parallel fan-out + pipelined engine) ...")
+        import json
+        import os
+
+        from . import runtime_bench
+
+        rt = runtime_bench.run(quick=args.quick)
+        # machine-readable perf-trajectory record at the repo root: each
+        # CI/bench run appends evidence that the concurrency claims hold
+        fan = rt["fanout"]
+        eng = rt["engine"]
+        bench = {
+            "benchmark": "runtime",
+            "cpu_count": fan["cpu_count"],
+            "fanout": {
+                "n_shards": fan["n_shards"],
+                "serial_loop_blocks_per_s": fan["serial_loop_blocks_per_s"],
+                "threads": {
+                    str(nt): {
+                        "fanout_blocks_per_s": row["fanout_blocks_per_s"],
+                        "speedup_vs_serial_loop": row["speedup_vs_serial_loop"],
+                        "workers": row.get("workers"),
+                    }
+                    for nt, row in fan["threads"].items()
+                },
+            },
+            "engine": {
+                "serial_mean_ttft_s": eng["serial"]["mean_ttft_s"],
+                "pipelined_mean_ttft_s": eng["pipelined"]["mean_ttft_s"],
+                "ttft_improvement": eng["ttft_improvement"],
+                "serial_mean_io_s": eng["serial"]["mean_io_s"],
+                "pipelined_mean_io_wait_s": eng["pipelined"]["mean_io_wait_s"],
+                "hit_rate": eng["pipelined"]["hit_rate"],
+                "overlap_io_s": eng["overlap_io_s"],
+            },
+        }
+        root_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root_dir, "BENCH_runtime.json"), "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"wrote BENCH_runtime.json (fan-out 4T "
+              f"{fan['threads'].get(4, fan['threads'].get('4', {})).get('speedup_vs_serial_loop', 0):.2f}x, "
+              f"pipelined TTFT {-100 * eng['ttft_improvement']:+.1f}%)")
 
     print(f"\nall benchmarks done in {time.time() - t_all:.0f}s; artifacts in benchmarks/artifacts/")
     return 0

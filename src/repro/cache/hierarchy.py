@@ -9,6 +9,27 @@ radix tree and RadixAttention logic are preserved; only the disk backend
 behind it is swapped.  ``acquire`` implements the longest-prefix reuse path
 (radix match, then a disk ``probe`` to extend the match, then ``get_batch``
 promotion), and ``commit`` implements write-through population.
+
+``acquire`` is factored into three phases so the serving engine can
+pipeline them (paper §3.4 batch operations):
+
+    plan(tokens)    -> AcquirePlan   radix match only; engine thread
+    fetch(plan)     -> DiskFetch     backend probe + batched get_batch;
+                                     touches ONLY the (thread-safe) store,
+                                     so it can run on an I/O executor while
+                                     the engine computes the previous batch
+    fulfill(plan, fetch) -> Acquisition   install/promote; engine thread
+
+``acquire`` = plan → fetch → fulfill, so the serial path is the same code.
+``fulfill`` re-matches the radix tree rather than trusting the plan — a
+batch committed between plan and fulfill may have grown the tree, and a
+prefetch must never install stale state.
+
+``commit`` installs into device memory on the engine thread and, when a
+``CommitQueue`` is attached, hands the disk write-through to the
+write-behind drain thread instead of charging it to the request.
+The radix tree itself is single-threaded by design: only the engine thread
+ever mutates it (fetch closures capture token lists, never nodes).
 """
 
 from __future__ import annotations
@@ -20,6 +41,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.backend import StorageBackend
+from ..runtime.writebehind import CommitQueue
 from .radix import (
     TIER_DEVICE,
     TIER_DISK,
@@ -41,6 +63,8 @@ class CacheStats:
     promote_s: float = 0.0  # disk -> memory I/O time
     demotions: int = 0
     drops: int = 0
+    writeback_blocks: int = 0  # commits handed to the write-behind queue
+    plan_stale: int = 0  # prefetch plans that fulfill found outdated
 
     @property
     def hit_rate(self) -> float:
@@ -58,6 +82,31 @@ class Acquisition:
     io_s: float  # measured promotion I/O time
 
 
+@dataclass
+class AcquirePlan:
+    """Phase 1 of acquire: what the radix tree knew at plan time.  Carries
+    only token lists and counts — never tree nodes — so the fetch phase can
+    run on another thread without touching shared tree state."""
+
+    tokens: List[int]
+    chain_blocks: int  # radix-matched blocks at plan time
+    disk_chain_depth: int  # deepest matched node whose data lives only on disk
+    total_blocks: int
+
+    @property
+    def need_disk(self) -> bool:
+        return self.disk_chain_depth > 0 or self.chain_blocks < self.total_blocks
+
+
+@dataclass
+class DiskFetch:
+    """Phase 2 result: the contiguous disk prefix (blocks from index 0)."""
+
+    probed_tokens: int = 0
+    blocks: List[np.ndarray] = field(default_factory=list)
+    io_s: float = 0.0
+
+
 class CacheHierarchy:
     def __init__(
         self,
@@ -66,6 +115,7 @@ class CacheHierarchy:
         host_budget_blocks: int,
         store: Optional[StorageBackend] = None,  # disk backend, or None (memory-only)
         write_through: bool = True,
+        commit_queue: Optional[CommitQueue] = None,  # write-behind; None = inline
     ):
         self.tree = RadixTree(block_size)
         self.block_size = block_size
@@ -73,6 +123,7 @@ class CacheHierarchy:
         self.host_budget = host_budget_blocks
         self.store = store
         self.write_through = write_through
+        self.commit_queue = commit_queue
         self.device_blocks = 0
         self.host_blocks = 0
         self.stats = CacheStats()
@@ -137,17 +188,51 @@ class CacheHierarchy:
         return toks
 
     # ---------------------------------------------------------------- acquire
-    def acquire(self, tokens: Sequence[int]) -> Acquisition:
-        """Longest-prefix reuse: radix match, disk-probe extension, and
-        promotion of every matched block to the device tier.  The returned
+    def plan(self, tokens: Sequence[int]) -> AcquirePlan:
+        """Phase 1 (engine thread): radix match; decide what disk I/O the
+        fetch phase should issue.  Does not lock or mutate tier state."""
+        B = self.block_size
+        chain = self.tree.match_prefix(tokens)
+        disk_depth = max((n.depth for n in chain if n.tier == TIER_DISK), default=0)
+        return AcquirePlan(
+            tokens=list(tokens),
+            chain_blocks=len(chain),
+            disk_chain_depth=disk_depth,
+            total_blocks=len(tokens) // B,
+        )
+
+    def fetch(self, plan: AcquirePlan) -> DiskFetch:
+        """Phase 2 (any thread): backend probe + one batched ``get_batch``
+        covering both the disk extension beyond the radix chain and the
+        chain nodes whose payloads live only on disk.  Touches nothing but
+        the thread-safe store."""
+        if self.store is None or not plan.need_disk:
+            return DiskFetch()
+        B = self.block_size
+        t0 = time.perf_counter()
+        probed = 0
+        if plan.chain_blocks < plan.total_blocks:
+            probed = self.store.probe(plan.tokens)
+        upto = max(probed, plan.disk_chain_depth * B)
+        blocks = self.store.get_batch(plan.tokens, upto) if upto else []
+        return DiskFetch(probed_tokens=probed, blocks=blocks, io_s=time.perf_counter() - t0)
+
+    def fulfill(self, plan: AcquirePlan, fetched: Optional[DiskFetch] = None) -> Acquisition:
+        """Phase 3 (engine thread): install fetched blocks and promote the
+        usable chain to the device tier.  Re-matches the tree — commits that
+        landed between plan and fulfill are honored, and fetched blocks are
+        only used where they still extend the (fresh) chain.  The returned
         node path is locked until ``release``."""
         B = self.block_size
+        tokens = plan.tokens
+        fetched = fetched or DiskFetch()
         self.stats.requests += 1
         self.stats.tokens_requested += len(tokens)
         t0 = time.perf_counter()
         chain = self.tree.match_prefix(tokens)
+        if len(chain) != plan.chain_blocks:
+            self.stats.plan_stale += 1
         dev = host = disk = 0
-        mem_matched = len(chain) * B
 
         # classify memory-resident part
         for n in chain:
@@ -158,28 +243,21 @@ class CacheHierarchy:
             elif n.tier == TIER_DISK:
                 disk += 1
 
-        # extend match through the disk backend beyond the in-memory chain
+        # extend the match past the in-memory chain with fetched disk blocks
         disk_ext_blocks: List[np.ndarray] = []
-        if self.store is not None and mem_matched < (len(tokens) // B) * B:
-            probed = self.store.probe(tokens)
-            if probed > mem_matched:
-                got = self.store.get_batch(tokens, probed)
-                usable = got[len(chain) :]  # blocks past the memory chain
-                disk_ext_blocks = usable
-                disk += len(usable)
+        if fetched.probed_tokens > len(chain) * B:
+            disk_ext_blocks = fetched.blocks[len(chain) :]
+            disk += len(disk_ext_blocks)
 
         # promote disk-resident chain nodes (their data lives only on disk)
         need_fetch = [n for n in chain if n.tier == TIER_DISK]
-        if need_fetch and self.store is not None:
-            upto = need_fetch[-1].depth * B
-            got = self.store.get_batch(tokens, upto)
-            for n in need_fetch:
-                i = n.depth - 1
-                if i < len(got):
-                    n.data = got[i]
-                else:  # disk lost it (eviction): degrade to miss
-                    n.tier = TIER_NONE
-                    disk -= 1
+        for n in need_fetch:
+            i = n.depth - 1
+            if i < len(fetched.blocks):
+                n.data = fetched.blocks[i]
+            else:  # disk lost it (eviction) or the plan predates it: miss
+                n.tier = TIER_NONE
+                disk -= 1
 
         # materialize the full usable chain on device
         nodes = list(chain)
@@ -209,7 +287,7 @@ class CacheHierarchy:
             self.device_blocks += 1
         self.tree.lock_path(usable)
 
-        io_s = time.perf_counter() - t0
+        io_s = fetched.io_s + (time.perf_counter() - t0)
         self.stats.promote_s += io_s
         reuse = len(usable) * B
         self.stats.tokens_hit_device += dev * B
@@ -225,10 +303,20 @@ class CacheHierarchy:
             io_s=io_s,
         )
 
+    def acquire(self, tokens: Sequence[int]) -> Acquisition:
+        """Longest-prefix reuse: radix match, disk-probe extension, and
+        promotion of every matched block to the device tier — the serial
+        composition of plan → fetch → fulfill.  The returned node path is
+        locked until ``release``."""
+        p = self.plan(tokens)
+        return self.fulfill(p, self.fetch(p))
+
     # ----------------------------------------------------------------- commit
     def commit(self, tokens: Sequence[int], new_blocks: List[np.ndarray], acq: Acquisition) -> None:
         """Install freshly computed KV blocks (covering tokens beyond
-        ``acq.reuse_tokens``) into the device tier, write-through to disk."""
+        ``acq.reuse_tokens``) into the device tier, then populate the disk
+        tier — inline write-through, or via the write-behind queue when one
+        is attached (the request no longer pays the disk write)."""
         B = self.block_size
         start_block = acq.reuse_tokens // B
         total_blocks = len(tokens) // B
@@ -245,9 +333,31 @@ class CacheHierarchy:
             n.tier = TIER_DEVICE
             self.device_blocks += 1
         if self.write_through and self.store is not None:
-            self.store.put_batch(tokens, new_blocks[:n_new], start_block=start_block)
-            for n in fresh:
-                n.on_disk = True
+            if self.commit_queue is not None:
+                # write-behind: capture plain values (token list + arrays),
+                # never tree nodes' mutable state.  ``on_disk`` is set at
+                # enqueue time — the queue holds the payloads by reference
+                # and owns the write, so a later demotion must not re-encode
+                # the same blocks synchronously on the engine thread.  Known
+                # window: a fetch racing the bounded queue can miss a block
+                # whose write is still queued and transiently treat it as a
+                # cache miss (recomputed, never corrupted); a failed
+                # write-behind surfaces on the next flush/drain (the
+                # standard write-back cache durability contract).
+                toks = list(tokens[: (start_block + n_new) * B])
+                blocks = [np.asarray(b) for b in new_blocks[:n_new]]
+                store = self.store
+                for n in fresh:
+                    n.on_disk = True
+                self.commit_queue.submit(
+                    lambda: store.put_batch(toks, blocks, start_block=start_block),
+                    nbytes=sum(b.nbytes for b in blocks),
+                )
+                self.stats.writeback_blocks += n_new
+            else:
+                self.store.put_batch(tokens, new_blocks[:n_new], start_block=start_block)
+                for n in fresh:
+                    n.on_disk = True
 
     def release(self, acq: Acquisition) -> None:
         self.tree.unlock_path(acq.nodes)

@@ -12,6 +12,8 @@ The contract (paper §3.2, Fig. 6):
     put_batch(tokens, blocks, start_block, skip_existing) -> n_written
     probe(tokens) -> n_tokens        longest *contiguous* cached prefix
     get_batch(tokens, n_tokens)      blocks covering tokens[:n_tokens]
+    probe_many / get_many / put_many multi-sequence forms (a sharded
+                                     backend fans these out in parallel)
     maintenance(compact_steps)       one scheduled maintenance cycle
     flush() / close()                durability / lifecycle
     stats / disk_bytes / file_count  observability
@@ -21,18 +23,38 @@ Invariants every backend must keep:
     reports a contiguous, immediately readable prefix;
   * ``put_batch`` keys block ``i`` by the whole token prefix through block
     ``i`` (content addressing), so identical prefixes dedup across requests;
-  * ``maintenance`` is deterministic and caller-scheduled (no background
-    threads), so tests and benchmarks control when compaction work happens.
+  * ``maintenance`` is deterministic and caller-scheduled — no backend
+    spawns its own threads.  The ``repro.runtime`` layer supplies threads
+    (``MaintenanceService`` and the I/O executor) when the deployment
+    wants work off the request path.
+
+Thread-safety contract (the concurrent runtime layer depends on this):
+  * Every method above is safe to call from multiple threads concurrently,
+    including ``maintenance`` racing reads and writes.  Implementations
+    use internal fine-grained locks: the LSM index and tensor-log
+    *bookkeeping* are lock-protected, while bulk payload reads from
+    immutable log files / SSTs take no lock at all (readers re-resolve
+    pointers and retry if eviction or a merge removed a file mid-read).
+  * Writes are never lost and reads are never torn: a reader sees either
+    a block's committed bytes (CRC-verified in the tensor log) or no block
+    — never a partial or mixed record.
+  * ``stats`` counters are updated under a lock so they sum correctly
+    across threads (``merge_stats`` relies on additivity).
+  * ``close`` is not required to be safe against in-flight operations;
+    callers quiesce (drain executors/queues) first.
 """
 
 from __future__ import annotations
 
 from dataclasses import fields
-from typing import Iterable, List, Protocol, Sequence, runtime_checkable
+from typing import Iterable, List, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
 
+from .batchops import BatchOpsMixin
 from .store import StoreStats
+
+__all__ = ["StorageBackend", "BatchOpsMixin", "merge_stats"]
 
 
 @runtime_checkable
@@ -57,6 +79,16 @@ class StorageBackend(Protocol):
     def probe(self, tokens: Sequence[int]) -> int: ...
 
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]: ...
+
+    def probe_many(self, seqs: Sequence[Sequence[int]]) -> List[int]: ...
+
+    def get_many(
+        self, items: Sequence[Tuple[Sequence[int], int]]
+    ) -> List[List[np.ndarray]]: ...
+
+    def put_many(
+        self, items: Sequence[Tuple[Sequence[int], Sequence[np.ndarray], int]]
+    ) -> List[int]: ...
 
     def maintenance(self, compact_steps: int = 8) -> dict: ...
 

@@ -15,12 +15,20 @@ Both satisfy the ``repro.core.backend.StorageBackend`` protocol — including
 its probe invariant (a probe reports a *contiguous* readable prefix, even
 after LRU eviction punches holes mid-prefix) — so the hierarchy, serving
 engine, and benchmarks are backend-agnostic.
+
+Thread-safety: baselines take one coarse re-entrant lock around every
+public operation.  That satisfies the backend contract (no lost writes, no
+torn reads, consistent stats) without complicating code whose entire role
+is to be the simple comparison point; the fine-grained design that keeps
+readers lock-free lives in ``KVBlockStore``.
 """
 
 from __future__ import annotations
 
+import functools
 import hashlib
 import os
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -28,9 +36,21 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .batchops import BatchOpsMixin
 from .codec import CODEC_RAW, BatchCodec
 from .keycodec import encode_tokens
 from .store import StoreStats
+
+
+def _locked(fn):
+    """Run the method under the instance's coarse ``_lock``."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+
+    return wrapper
 
 FS_BLOCK = 4096  # filesystem allocation unit
 INODE_OVERHEAD = 256  # metadata bytes charged per file (inode + dirent)
@@ -42,7 +62,7 @@ def fs_footprint(payload_bytes: int) -> int:
     return max(1, blocks) * FS_BLOCK + INODE_OVERHEAD
 
 
-class FilePerObjectStore:
+class FilePerObjectStore(BatchOpsMixin):
     """One file per KV block (state-of-practice disk backend)."""
 
     name = "file"
@@ -73,13 +93,24 @@ class FilePerObjectStore:
         self.stats = StoreStats()
         self.modeled_penalty_s = 0.0
         # holes mid-prefix only appear after an eviction or a refused write
-        # (max_files wall); until then probe stays O(log n)
-        self._may_have_holes = False
+        # (max_files wall); until then probe stays O(log n).  Persisted via
+        # a marker file (as in KVBlockStore) so the probe contiguity
+        # invariant survives reopen.
+        self._holes_marker = os.path.join(root, "evicted.marker")
+        self._may_have_holes = os.path.exists(self._holes_marker)
+        self._lock = threading.RLock()
         self._recover()
+
+    def _mark_holes(self) -> None:
+        if not self._may_have_holes:
+            self._may_have_holes = True
+            open(self._holes_marker, "w").close()
 
     def _recover(self) -> None:
         for dirpath, _, files in os.walk(self.root):
             for f in files:
+                if not f.endswith(".bin"):
+                    continue  # bookkeeping files (evicted.marker) are not objects
                 p = os.path.join(dirpath, f)
                 fp = fs_footprint(os.path.getsize(p))
                 self._lru[p] = fp
@@ -97,6 +128,7 @@ class FilePerObjectStore:
         if path in self._lru:
             self._lru.move_to_end(path)
 
+    @_locked
     def put_batch(self, tokens, blocks, start_block: int = 0, skip_existing: bool = True) -> int:
         B = self.block_size
         t0 = time.perf_counter()
@@ -112,7 +144,7 @@ class FilePerObjectStore:
                 continue
             if self.max_files is not None and len(self._lru) >= self.max_files:
                 # the §4.2 wall: filesystem refuses/degrades past the file cap
-                self._may_have_holes = True  # a later block may still land
+                self._mark_holes()  # a later block may still land
                 continue
             payload = self.codec.encode(np.asarray(block))
             os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -131,6 +163,7 @@ class FilePerObjectStore:
             self._evict_to_budget()
         return wrote
 
+    @_locked
     def probe(self, tokens) -> int:
         B = self.block_size
         max_blocks = len(tokens) // B
@@ -163,6 +196,7 @@ class FilePerObjectStore:
             self.stats.probe_hits += 1
         return lo * B
 
+    @_locked
     def get_batch(self, tokens, n_tokens: int) -> List[np.ndarray]:
         B = self.block_size
         t0 = time.perf_counter()
@@ -182,7 +216,7 @@ class FilePerObjectStore:
 
     def _evict_to_budget(self) -> None:
         while self.fs_bytes > self.budget_bytes and self._lru:
-            self._may_have_holes = True
+            self._mark_holes()
             path, fp = self._lru.popitem(last=False)
             try:
                 os.remove(path)
@@ -191,6 +225,7 @@ class FilePerObjectStore:
             self.fs_bytes -= fp
             self.stats.evicted_blocks += 1
 
+    @_locked
     def maintenance(self, compact_steps: int = 0) -> dict:
         if self.budget_bytes is not None:
             self._evict_to_budget()
@@ -211,7 +246,7 @@ class FilePerObjectStore:
         pass
 
 
-class MemoryOnlyStore:
+class MemoryOnlyStore(BatchOpsMixin):
     """In-memory LRU KV cache bounded by a byte budget."""
 
     name = "memory"
@@ -223,10 +258,12 @@ class MemoryOnlyStore:
         self.bytes = 0
         self.stats = StoreStats()
         self._may_have_holes = False  # set on first LRU eviction
+        self._lock = threading.RLock()
 
     def _key(self, tokens, n_tokens: int) -> bytes:
         return encode_tokens(tokens[:n_tokens])
 
+    @_locked
     def put_batch(self, tokens, blocks, start_block: int = 0, skip_existing: bool = True) -> int:
         B = self.block_size
         wrote = 0
@@ -253,6 +290,7 @@ class MemoryOnlyStore:
         self.stats.put_tokens += wrote * B
         return wrote
 
+    @_locked
     def probe(self, tokens) -> int:
         B = self.block_size
         self.stats.probes += 1
@@ -277,6 +315,7 @@ class MemoryOnlyStore:
             self.stats.probe_hits += 1
         return lo * B
 
+    @_locked
     def get_batch(self, tokens, n_tokens: int) -> List[np.ndarray]:
         B = self.block_size
         out: List[np.ndarray] = []
@@ -291,6 +330,7 @@ class MemoryOnlyStore:
         self.stats.get_tokens += len(out) * B
         return out
 
+    @_locked
     def maintenance(self, compact_steps: int = 0) -> dict:
         return {}
 

@@ -72,7 +72,9 @@ class BatchCodec:
         return hdr + body
 
     @staticmethod
-    def decode(raw: bytes) -> np.ndarray:
+    def decode(raw) -> np.ndarray:
+        """``raw`` may be bytes or a zero-copy memoryview (the tensor-log
+        batch read path hands out views into one coalesced read)."""
         codec, zl, ndim = struct.unpack_from("<BBH", raw)
         pos = 4
         shape = struct.unpack_from(f"<{ndim}I", raw, pos)
@@ -80,7 +82,7 @@ class BatchCodec:
         (dt_code,) = struct.unpack_from("<B", raw, pos)
         pos += 1
         dtype = _DTYPES[dt_code]
-        body = raw[pos:]
+        body = memoryview(raw)[pos:]
         if zl:
             body = zlib.decompress(body)
         if codec == CODEC_INT8:

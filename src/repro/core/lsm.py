@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import heapq
 import os
+import threading
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Tuple
 
@@ -78,6 +79,15 @@ class LSMTree:
     ):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # One re-entrant lock serializes every structural operation
+        # (memtable mutation, WAL append, flush, compaction, manifest
+        # install) *and* point/range reads: reads traverse the memtable and
+        # the live run list, both of which flush/compaction rewrite.  The
+        # expensive I/O the serving path cares about — tensor-log payload
+        # reads — lives outside this tree and stays lock-free; index
+        # entries are tiny pointer records, so the critical sections here
+        # are short.
+        self._lock = threading.RLock()
         self.buffer_bytes = buffer_bytes
         self.block_bytes = block_bytes
         self.bloom_bits_per_key = bloom_bits_per_key
@@ -151,91 +161,104 @@ class LSMTree:
 
     # ------------------------------------------------------------- public API
     def put(self, key: bytes, value: Optional[bytes]) -> None:
-        self.wal.append(key, value)
-        self.mem.put(key, value)
-        self.stats.puts += 1
-        if self.mem.bytes >= self.buffer_bytes:
-            self.flush()
+        with self._lock:
+            self.wal.append(key, value)
+            self.mem.put(key, value)
+            self.stats.puts += 1
+            if self.fsync:
+                self.wal.sync()
+            if self.mem.bytes >= self.buffer_bytes:
+                self.flush()
 
     def put_batch(self, items) -> None:
-        for k, v in items:
-            self.wal.append(k, v)
-            self.mem.put(k, v)
-            self.stats.puts += 1
-        if self.fsync:
-            self.wal.sync()
-        if self.mem.bytes >= self.buffer_bytes:
-            self.flush()
+        with self._lock:
+            for k, v in items:
+                self.wal.append(k, v)
+                self.mem.put(k, v)
+                self.stats.puts += 1
+            if self.fsync:
+                self.wal.sync()
+            if self.mem.bytes >= self.buffer_bytes:
+                self.flush()
 
     def delete(self, key: bytes) -> None:
         self.put(key, None)
 
     def get(self, key: bytes):
         """(found, value). Tombstones report found=False."""
-        self.stats.gets += 1
-        found, v = self.mem.get(key)
-        if found:
-            if v is None:
-                return False, None
-            self.stats.get_hits += 1
-            return True, v
-        for lv in self.levels:
-            for run in lv.runs:  # newest first
-                if key < run.meta.min_key or key > run.meta.max_key:
-                    continue
-                if key not in run.reader.bloom:
-                    self.stats.bloom_negative += 1
-                    continue
-                found, v = run.reader.get(key)
-                if found:
-                    if v is None:
-                        return False, None
-                    self.stats.get_hits += 1
-                    return True, v
-        return False, None
+        with self._lock:
+            self.stats.gets += 1
+            found, v = self.mem.get(key)
+            if found:
+                if v is None:
+                    return False, None
+                self.stats.get_hits += 1
+                return True, v
+            for lv in self.levels:
+                for run in lv.runs:  # newest first
+                    if key < run.meta.min_key or key > run.meta.max_key:
+                        continue
+                    if key not in run.reader.bloom:
+                        self.stats.bloom_negative += 1
+                        continue
+                    found, v = run.reader.get(key)
+                    if found:
+                        if v is None:
+                            return False, None
+                        self.stats.get_hits += 1
+                        return True, v
+            return False, None
 
     def range(self, start: bytes, end: bytes) -> Iterator:
         """Merged scan over memtable + all runs, newest shadows oldest,
-        tombstones suppressed."""
-        self.stats.range_scans += 1
-        sources = [(0, self.mem.range(start, end))]  # priority 0 = newest
-        pri = 1
-        for lv in self.levels:
-            for run in lv.runs:
-                if not (run.meta.max_key < start or run.meta.min_key >= end):
-                    sources.append((pri, run.reader.range(start, end)))
-                pri += 1
+        tombstones suppressed.  Materialized under the tree lock — a lazy
+        generator would hold references into runs a concurrent compaction
+        may close; index entries are small pointer records, so the eager
+        list is cheap."""
+        with self._lock:
+            self.stats.range_scans += 1
+            sources = [(0, self.mem.range(start, end))]  # priority 0 = newest
+            pri = 1
+            for lv in self.levels:
+                for run in lv.runs:
+                    if not (run.meta.max_key < start or run.meta.min_key >= end):
+                        sources.append((pri, run.reader.range(start, end)))
+                    pri += 1
 
-        heap: List = []
-        for prio, it in sources:
-            try:
-                k, v = next(it)
-                heap.append((k, prio, v, it))
-            except StopIteration:
-                pass
-        heapq.heapify(heap)
-        last_key: Optional[bytes] = None
-        while heap:
-            k, prio, v, it = heapq.heappop(heap)
-            if k != last_key:
-                last_key = k
-                if v is not None:
-                    yield k, v
-            try:
-                nk, nv = next(it)
-                heapq.heappush(heap, (nk, prio, nv, it))
-            except StopIteration:
-                pass
+            heap: List = []
+            for prio, it in sources:
+                try:
+                    k, v = next(it)
+                    heap.append((k, prio, v, it))
+                except StopIteration:
+                    pass
+            heapq.heapify(heap)
+            last_key: Optional[bytes] = None
+            out: List[Tuple[bytes, bytes]] = []
+            while heap:
+                k, prio, v, it = heapq.heappop(heap)
+                if k != last_key:
+                    last_key = k
+                    if v is not None:
+                        out.append((k, v))
+                try:
+                    nk, nv = next(it)
+                    heapq.heappush(heap, (nk, prio, nv, it))
+                except StopIteration:
+                    pass
+        return iter(out)
 
     # ----------------------------------------------------------------- tuning
     def set_targets(self, T: int, K: int) -> None:
         """Lazy transition entry point: adopted per level at its next
         compaction (App. C)."""
-        self.target_T = max(2, T)
-        self.target_K = max(1, min(K, self.target_T - 1))
+        with self._lock:
+            self.target_T = max(2, T)
+            self.target_K = max(1, min(K, self.target_T - 1))
 
     def level_params(self) -> List[Tuple[int, int]]:
-        return [(lv.T, lv.K) for lv in self.levels]
+        with self._lock:
+            return [(lv.T, lv.K) for lv in self.levels]
 
     # ------------------------------------------------------------ flush/merge
     def _new_run_path(self) -> str:
@@ -243,6 +266,10 @@ class LSMTree:
         return os.path.join(self.root, f"run_{self._run_no:08d}.sst")
 
     def flush(self) -> None:
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
         if not len(self.mem):
             return
         w = SSTWriter(self._new_run_path(), self.block_bytes, self.bloom_bits_per_key)
@@ -281,18 +308,19 @@ class LSMTree:
 
     def maybe_compact(self, max_steps: int = 64) -> int:
         """Run up to ``max_steps`` single-level compactions; returns count."""
-        steps = 0
-        while steps < max_steps:
-            victim = None
-            for i in range(len(self.levels)):
-                if self._violation(i):
-                    victim = i
-                    break
-            if victim is None:
-                return steps
-            self._compact_level(victim)
-            steps += 1
-        return steps
+        with self._lock:
+            steps = 0
+            while steps < max_steps:
+                victim = None
+                for i in range(len(self.levels)):
+                    if self._violation(i):
+                        victim = i
+                        break
+                if victim is None:
+                    return steps
+                self._compact_level(victim)
+                steps += 1
+            return steps
 
     def _merge_runs(self, runs: List[_Run], drop_tombstones: bool) -> Optional[RunMeta]:
         w = SSTWriter(self._new_run_path(), self.block_bytes, self.bloom_bits_per_key)
@@ -365,19 +393,23 @@ class LSMTree:
     # ------------------------------------------------------------------ misc
     @property
     def n_entries(self) -> int:
-        return len(self.mem) + sum(r.meta.entries for lv in self.levels for r in lv.runs)
+        with self._lock:
+            return len(self.mem) + sum(r.meta.entries for lv in self.levels for r in lv.runs)
 
     @property
     def disk_bytes(self) -> int:
-        return sum(r.meta.data_bytes for lv in self.levels for r in lv.runs)
+        with self._lock:
+            return sum(r.meta.data_bytes for lv in self.levels for r in lv.runs)
 
     @property
     def n_runs(self) -> int:
-        return sum(len(lv.runs) for lv in self.levels)
+        with self._lock:
+            return sum(len(lv.runs) for lv in self.levels)
 
     def close(self) -> None:
-        self.wal.sync()
-        self.wal.close()
-        for lv in self.levels:
-            for r in lv.runs:
-                r.reader.close()
+        with self._lock:
+            self.wal.sync()
+            self.wal.close()
+            for lv in self.levels:
+                for r in lv.runs:
+                    r.reader.close()

@@ -26,6 +26,16 @@ shards, bounding per-cycle compaction work to O(1) shards regardless of N
 fleet).  The byte budget is global: eviction drains the largest-footprint
 shard first, so pressure lands proportional to shard footprint rather than
 uniformly punishing cold shards.
+
+Parallel fan-out: the multi-sequence operations (``probe_many`` /
+``get_many`` / ``put_many``) group sequences by shard and run the shard
+groups concurrently on an ``IOExecutor`` (``io_threads`` constructor
+argument, or a shared executor via ``io_executor``).  Shards are fully
+independent stores, so the groups contend on nothing — this is the step
+that converts sharding from a locality win into a throughput win.  The
+maintenance cycle fans its ``shards_per_cycle`` shard cycles out the same
+way.  With no executor (``io_threads=0``) every path degrades to the
+serial loop.
 """
 
 from __future__ import annotations
@@ -33,10 +43,11 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..runtime.executor import IOExecutor
 from .backend import merge_stats
 from .keycodec import encode_tokens
 from .store import KVBlockStore, StoreStats
@@ -66,11 +77,20 @@ class ShardedKVBlockStore:
         block_size: int = 16,
         budget_bytes: Optional[int] = None,
         shards_per_cycle: int = 2,
+        io_threads: int = 0,
+        io_executor: Optional[IOExecutor] = None,
+        fsync_writes: bool = False,
         **shard_kwargs,
     ):
         """``shard_kwargs`` are forwarded to every ``KVBlockStore`` shard
         (codec, buffer_bytes, vlog_file_bytes, adaptive, ...).  The byte
-        budget is enforced globally here, never per shard."""
+        budget is enforced globally here, never per shard.
+
+        ``io_threads`` > 0 creates an owned ``IOExecutor`` for parallel
+        shard fan-out (closed with the store); alternatively pass a shared
+        ``io_executor`` (not closed here).  ``fsync_writes`` is plumbed to
+        every shard: each shard fsyncs its tensor log before the WAL-backed
+        index insert commits (two-phase durability ordering)."""
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.root = root
@@ -105,15 +125,33 @@ class ShardedKVBlockStore:
                 os.path.join(root, f"shard_{i:03d}"),
                 block_size=block_size,
                 budget_bytes=None,
+                fsync_writes=fsync_writes,
                 **shard_kwargs,
             )
             for i in range(n_shards)
         ]
+        self.fsync_writes = fsync_writes
+        if io_executor is not None:
+            self._executor, self._owns_executor = io_executor, False
+        elif io_threads > 0:
+            self._executor = IOExecutor(max_workers=io_threads)
+            self._owns_executor = True
+        else:
+            self._executor, self._owns_executor = None, False
         for s in self.shards:
             s.controller.min_ops_between_tunings = max(
                 64, s.controller.min_ops_between_tunings // n_shards
             )
         self._rr = 0  # round-robin maintenance cursor
+
+    def set_io_executor(self, executor: Optional[IOExecutor], own: bool = False) -> None:
+        """Swap the fan-out executor (e.g. to share the serving runtime's
+        pool, or for benchmark sweeps over thread counts).  Closes the
+        previous executor if this store owned it."""
+        if self._owns_executor and self._executor is not None and self._executor is not executor:
+            self._executor.close()
+        self._executor = executor
+        self._owns_executor = bool(own and executor is not None)
 
     # --------------------------------------------------------------- routing
     def shard_for(self, tokens: Sequence[int]) -> KVBlockStore:
@@ -137,6 +175,62 @@ class ShardedKVBlockStore:
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
         return self.shard_for(tokens).get_batch(tokens, n_tokens)
 
+    # ------------------------------------------------------- parallel fan-out
+    def _shard_groups(self, seqs: Sequence[Sequence[int]]) -> Dict[int, List[int]]:
+        """Map shard index -> positions in ``seqs`` routed to it."""
+        groups: Dict[int, List[int]] = {}
+        for pos, tokens in enumerate(seqs):
+            groups.setdefault(shard_of(tokens, self.block_size, self.n_shards), []).append(pos)
+        return groups
+
+    def _fan_out(self, seqs: Sequence[Sequence[int]], per_item) -> list:
+        """Run ``per_item(shard, position)`` for every sequence, grouped by
+        shard; groups run in parallel on the executor (serial without one).
+        Large groups are split into chunks so a hot shard (hash skew) does
+        not become the fan-out's makespan — shards are thread-safe, so
+        same-shard chunks may run concurrently.  Results are positional:
+        ``out[i]`` answers item ``i``."""
+        groups = self._shard_groups(seqs)
+        out: list = [None] * len(seqs)
+
+        def run_chunk(arg: Tuple[int, List[int]]) -> None:
+            si, positions = arg
+            shard = self.shards[si]
+            for pos in positions:
+                out[pos] = per_item(shard, pos)
+
+        if self._executor is not None and len(seqs) > 1:
+            # chunk for load balance: ~4 tasks per worker across the batch
+            workers = max(1, self._executor.max_workers)
+            chunk = max(1, len(seqs) // (4 * workers))
+            tasks = [
+                (si, positions[i : i + chunk])
+                for si, positions in groups.items()
+                for i in range(0, len(positions), chunk)
+            ]
+            self._executor.map_parallel(run_chunk, tasks)
+        else:
+            for item in groups.items():
+                run_chunk(item)
+        return out
+
+    def probe_many(self, seqs: Sequence[Sequence[int]]) -> List[int]:
+        return self._fan_out(seqs, lambda shard, pos: shard.probe(seqs[pos]))
+
+    def get_many(self, items: Sequence[Tuple[Sequence[int], int]]) -> List[List[np.ndarray]]:
+        return self._fan_out(
+            [t for t, _ in items],
+            lambda shard, pos: shard.get_batch(items[pos][0], items[pos][1]),
+        )
+
+    def put_many(
+        self, items: Sequence[Tuple[Sequence[int], Sequence[np.ndarray], int]]
+    ) -> List[int]:
+        return self._fan_out(
+            [t for t, _, _ in items],
+            lambda shard, pos: shard.put_batch(items[pos][0], items[pos][1], start_block=items[pos][2]),
+        )
+
     def maintenance(self, compact_steps: int = 8) -> dict:
         """One cycle: compact/merge the next ``shards_per_cycle`` shards
         (round-robin), then enforce the global budget.  The report carries
@@ -144,10 +238,20 @@ class ShardedKVBlockStore:
         ``evicted_files``) plus a per-shard breakdown, so callers account
         for maintenance uniformly across backends."""
         rep: dict = {"compactions": 0, "shards": {}}
+        cycle: List[int] = []
         for _ in range(self.shards_per_cycle):
-            i = self._rr % self.n_shards
+            cycle.append(self._rr % self.n_shards)
             self._rr += 1
-            srep = self.shards[i].maintenance(compact_steps)
+        # shards are independent engines: their compaction/merge cycles fan
+        # out in parallel (each shard's maintenance serializes internally)
+        def one(i: int) -> dict:
+            return self.shards[i].maintenance(compact_steps)
+
+        if self._executor is not None and len(cycle) > 1:
+            reports = self._executor.map_parallel(one, cycle)
+        else:
+            reports = [one(i) for i in cycle]
+        for i, srep in zip(cycle, reports):
             rep["shards"][i] = srep
             rep["compactions"] += srep.get("compactions", 0)
         if self.budget_bytes is not None:
@@ -182,6 +286,8 @@ class ShardedKVBlockStore:
             s.sync_wal()
 
     def close(self) -> None:
+        if self._owns_executor and self._executor is not None:
+            self._executor.close()
         for s in self.shards:
             s.close()
 

@@ -13,18 +13,34 @@ collects).
 
 Index entry value layout: ``LogPointer(20B) | u8 flags`` — compact metadata
 only, per key-value separation.
+
+Concurrency (see ``backend.py`` for the cross-backend contract): mutators
+(``put_batch``, ``maintenance``, eviction, flush) serialize on a store
+mutation lock; ``probe``/``get_batch`` run concurrently with them — index
+point/range lookups are protected inside ``LSMTree``, tensor-log payload
+reads are lock-free against immutable log files, and a read that loses a
+race with file eviction/merging re-resolves its pointers from the index
+and retries.  Stats and the adaptive controller share a dedicated lock so
+counters sum correctly under concurrent load.
+
+Durability ordering (two-phase write): with ``fsync_writes`` enabled the
+tensor-log append is fsynced **before** the WAL-backed index insert, so a
+crash can only ever leave *unreferenced* log records (garbage the merge
+service collects) — never an index entry pointing at bytes that were lost.
 """
 
 from __future__ import annotations
 
 import os
 import struct
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .batchops import BatchOpsMixin
 from .codec import CODEC_INT8, BatchCodec
 from .controller import OP_EMPTY, OP_RANGE, OP_READ, OP_WRITE, AdaptiveController
 from .keycodec import encode_tokens
@@ -56,7 +72,7 @@ class StoreStats:
         return self.payload_bytes_in / max(1, self.payload_bytes_stored)
 
 
-class KVBlockStore:
+class KVBlockStore(BatchOpsMixin):
     """Disk-resident KV-cache store over an LSM index + tensor log."""
 
     name = "lsm"
@@ -77,21 +93,31 @@ class KVBlockStore:
         adaptive: bool = True,
         controller_window: int = 4096,
         fsync: bool = False,
+        fsync_writes: Optional[bool] = None,
     ):
+        # ``fsync_writes`` is the documented knob; ``fsync`` is kept as a
+        # backward-compatible alias (either turns durability on).
+        self.fsync_writes = bool(fsync) if fsync_writes is None else bool(fsync_writes)
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.block_size = block_size
         self.codec = codec or BatchCodec(CODEC_INT8, use_zlib=True)
         self.budget_bytes = budget_bytes
+        self._lock = threading.RLock()  # serializes mutators (put/maintenance/evict)
+        self._stats_lock = threading.Lock()  # stats counters + adaptive controller
         self.index = LSMTree(
             os.path.join(root, "index"),
             buffer_bytes=buffer_bytes,
             size_ratio=size_ratio,
             runs_per_level=runs_per_level,
             bloom_bits_per_key=bloom_bits_per_key,
-            fsync=fsync,
+            fsync=self.fsync_writes,
         )
-        self.log = TensorLog(os.path.join(root, "log"), max_file_bytes=vlog_file_bytes, fsync_writes=fsync)
+        self.log = TensorLog(
+            os.path.join(root, "log"),
+            max_file_bytes=vlog_file_bytes,
+            fsync_writes=self.fsync_writes,
+        )
         self.merger = TensorFileMerger(
             self.log, self.index, max_files=max_log_files, garbage_threshold=garbage_threshold
         )
@@ -132,6 +158,12 @@ class KVBlockStore:
         B = self.block_size
         t0 = time.perf_counter()
         records = []  # (key, payload)
+        bytes_in = bytes_stored = 0
+        # encode outside the mutation lock: codec CPU (quantize + zlib) is
+        # the expensive part and must not serialize concurrent writers
+        # across shards sharing a thread pool.  The dedup check may race a
+        # concurrent writer of the same key; the loser's record becomes
+        # garbage the merge service collects — never a lost write.
         for i, block in enumerate(blocks):
             bi = start_block + i
             end = (bi + 1) * B
@@ -143,19 +175,27 @@ class KVBlockStore:
                 if found:
                     continue
             payload = self.codec.encode(np.asarray(block))
-            self.stats.payload_bytes_in += np.asarray(block).nbytes
-            self.stats.payload_bytes_stored += len(payload)
+            bytes_in += np.asarray(block).nbytes
+            bytes_stored += len(payload)
             records.append((key, payload))
         if not records:
             return 0
-        # phase 1: tensor log append (sequential, one syscall)
-        ptrs = self.log.append_batch(records)
-        # phase 2: atomic index insert (WAL-backed commit point)
-        self.index.put_batch((k, self._pack_value(p)) for (k, _), p in zip(records, ptrs))
-        self.controller.record(OP_WRITE, len(records))
-        self.stats.put_blocks += len(records)
-        self.stats.put_tokens += len(records) * B
-        self.stats.io_write_s += time.perf_counter() - t0
+        with self._lock:
+            # phase 1: tensor log append.  Durability ordering: with
+            # fsync_writes the log was constructed with fsync-per-append,
+            # so the payload bytes are on disk *before* phase 2's WAL-backed
+            # index insert can commit a pointer to them (the same internal
+            # fsync also covers the merge service's relocation appends).
+            ptrs = self.log.append_batch(records)
+            # phase 2: atomic index insert (WAL-backed commit point)
+            self.index.put_batch((k, self._pack_value(p)) for (k, _), p in zip(records, ptrs))
+        with self._stats_lock:
+            self.controller.record(OP_WRITE, len(records))
+            self.stats.payload_bytes_in += bytes_in
+            self.stats.payload_bytes_stored += bytes_stored
+            self.stats.put_blocks += len(records)
+            self.stats.put_tokens += len(records) * B
+            self.stats.io_write_s += time.perf_counter() - t0
         return len(records)
 
     # ----------------------------------------------------------------- probe
@@ -165,17 +205,20 @@ class KVBlockStore:
         (paper App. B: Bloom filters prune the misses)."""
         B = self.block_size
         max_blocks = len(tokens) // B
-        self.stats.probes += 1
+        with self._stats_lock:
+            self.stats.probes += 1
         if max_blocks == 0:
-            self.stats.probe_empty += 1
-            self.controller.record(OP_EMPTY, 1)
+            with self._stats_lock:
+                self.stats.probe_empty += 1
+                self.controller.record(OP_EMPTY, 1)
             return 0
         lo, hi = 0, max_blocks  # invariant: block count `lo` exists (0 = root)
         while lo < hi:
             mid = (lo + hi + 1) // 2
             found, _ = self.index.get(self._key(tokens, mid * B))
-            self.stats.probe_lookups += 1
-            self.controller.record(OP_READ if found else OP_EMPTY, 1)
+            with self._stats_lock:
+                self.stats.probe_lookups += 1
+                self.controller.record(OP_READ if found else OP_EMPTY, 1)
             if found:
                 lo = mid
             else:
@@ -189,10 +232,11 @@ class KVBlockStore:
             # the first eviction: hole-free stores keep the pure O(log n)
             # Bloom-pruned probe.
             lo = self._contiguous_blocks(tokens, lo)
-        if lo == 0:
-            self.stats.probe_empty += 1
-        else:
-            self.stats.probe_hits += 1
+        with self._stats_lock:
+            if lo == 0:
+                self.stats.probe_empty += 1
+            else:
+                self.stats.probe_hits += 1
         return lo * B
 
     def _scan_block_ptrs(self, tokens: Sequence[int], n_blocks: int) -> List[Optional[LogPointer]]:
@@ -208,7 +252,8 @@ class KVBlockStore:
             idx = wanted.get(k)
             if idx is not None:
                 ptrs[idx] = self._unpack_value(v)
-        self.controller.record(OP_RANGE, 1)
+        with self._stats_lock:
+            self.controller.record(OP_RANGE, 1)
         return ptrs
 
     def _contiguous_blocks(self, tokens: Sequence[int], n_blocks: int) -> int:
@@ -228,22 +273,40 @@ class KVBlockStore:
         if n_blocks == 0:
             return []
         t0 = time.perf_counter()
-        ptrs = self._scan_block_ptrs(tokens, n_blocks)
-        present = [(i, p) for i, p in enumerate(ptrs) if p is not None]
         blocks: List[Optional[np.ndarray]] = [None] * n_blocks
-        if present:
-            recs = self.log.read_batch([p for _, p in present])
+        # Optimistic lock-free read: resolve pointers, read payloads with no
+        # lock held.  If FIFO eviction or the merge service removed a log
+        # file between the scan and the read (FileNotFoundError), re-resolve
+        # and retry — the index was updated (tombstoned or repointed)
+        # *before* the file was unlinked, so a fresh scan converges.  Any
+        # other I/O error (notably a CRC mismatch: records are immutable
+        # once their pointer is published, so a bad checksum is real
+        # corruption, never a race) propagates to the caller.  Bounded
+        # attempts: a reader can lose the eviction race at most once per
+        # maintenance cycle in practice.
+        for _attempt in range(3):
+            ptrs = self._scan_block_ptrs(tokens, n_blocks)
+            present = [(i, p) for i, p in enumerate(ptrs) if p is not None]
+            blocks = [None] * n_blocks
+            if not present:
+                break
+            try:
+                recs = self.log.read_batch([p for _, p in present])
+            except FileNotFoundError:
+                continue  # lost the race with eviction/merge: retry
             for (i, _), (_, payload) in zip(present, recs):
                 blocks[i] = BatchCodec.decode(payload)
+            break
         # only the contiguous prefix is usable as KV cache
         out: List[np.ndarray] = []
         for b in blocks:
             if b is None:
                 break
             out.append(b)
-        self.stats.get_blocks += len(out)
-        self.stats.get_tokens += len(out) * B
-        self.stats.io_read_s += time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats.get_blocks += len(out)
+            self.stats.get_tokens += len(out) * B
+            self.stats.io_read_s += time.perf_counter() - t0
         return out
 
     # ------------------------------------------------------------ lifecycle
@@ -252,33 +315,43 @@ class KVBlockStore:
         budget eviction.  Deterministic (no background thread) so tests and
         benchmarks control scheduling; ``serving.engine`` calls it between
         batches, mirroring the paper's 'scheduled compaction cycles'."""
-        rep: dict = {}
-        rep["compactions"] = self.index.maybe_compact(compact_steps)
-        if self.merger.needed():
-            m = self.merger.run()
-            rep["merge"] = {"files": m.files_removed, "moved": m.records_moved, "reclaimed": m.bytes_reclaimed}
-        if self.budget_bytes is not None:
-            rep["evicted_files"] = self._evict_to_budget()
-        return rep
+        with self._lock:
+            rep: dict = {}
+            rep["compactions"] = self.index.maybe_compact(compact_steps)
+            if self.merger.needed():
+                m = self.merger.run()
+                rep["merge"] = {"files": m.files_removed, "moved": m.records_moved, "reclaimed": m.bytes_reclaimed}
+            if self.budget_bytes is not None:
+                rep["evicted_files"] = self._evict_to_budget()
+            return rep
 
     def evict_oldest_file(self) -> bool:
         """Drop the oldest tensor-log file and tombstone its index entries
         (the unit of FIFO eviction; ``ShardedKVBlockStore`` drives this
         directly to enforce a global budget across shards).  Returns False
-        when only the active file remains."""
-        if self.log.file_count <= 1:
-            return False
-        if not self._may_have_holes:
-            self._may_have_holes = True
-            open(self._holes_marker, "w").close()
-        fid = self.log.file_ids()[0]
-        keys = [key for _, key, _ in self.log.scan_file(fid)]
-        for key in keys:
-            found, v = self.index.get(key)
-            if found and self._unpack_value(v).file_id == fid:
-                self.index.delete(key)
-                self.stats.evicted_blocks += 1
-        self.log.remove_file(fid)
+        when only the active file remains.  Index entries are tombstoned
+        *before* the file is unlinked so concurrent lock-free readers that
+        lose the race re-resolve to a consistent (evicted) view."""
+        with self._lock:
+            if self.log.file_count <= 1:
+                return False
+            if not self._may_have_holes:
+                self._may_have_holes = True
+                open(self._holes_marker, "w").close()
+            fid = self.log.file_ids()[0]
+            keys = [key for _, key, _ in self.log.scan_file(fid)]
+            # one batched tombstone insert (single WAL sync under
+            # fsync_writes) instead of a per-key delete loop
+            dead = []
+            for key in keys:
+                found, v = self.index.get(key)
+                if found and self._unpack_value(v).file_id == fid:
+                    dead.append(key)
+            self.index.put_batch((k, None) for k in dead)
+            evicted = len(dead)
+            self.log.remove_file(fid)
+        with self._stats_lock:
+            self.stats.evicted_blocks += evicted
         return True
 
     def _evict_to_budget(self) -> int:
@@ -305,15 +378,19 @@ class KVBlockStore:
         return self.index.stats.write_amplification
 
     def flush(self) -> None:
-        self.index.flush()
-        self.log.sync()
+        with self._lock:
+            self.index.flush()
+            self.log.sync()
 
     def sync_wal(self) -> None:
-        """Durability point without a memtable flush: WAL + tensor log hit
-        disk, so recovery replays the index from the WAL."""
-        self.index.wal.sync()
-        self.log.sync()
+        """Durability point without a memtable flush: tensor log first, then
+        the WAL (same ordering as the two-phase write), so recovery replays
+        an index whose pointers all resolve."""
+        with self._lock:
+            self.log.sync()
+            self.index.wal.sync()
 
     def close(self) -> None:
-        self.index.close()
-        self.log.close()
+        with self._lock:
+            self.index.close()
+            self.log.close()

@@ -12,12 +12,22 @@ without consulting the index)::
 Batch reads coalesce adjacent ``(file, offset)`` ranges into single
 sequential reads — this is the mechanism that converts the file-per-object
 random-I/O pattern into sequential I/O (paper App. B, Get Batch).
+
+Concurrency: appends, file removal, and the size/liveness bookkeeping are
+serialized by an internal lock; **reads take no lock at all**.  Log records
+are immutable once their pointer is published (append flushes before the
+index insert that publishes the pointer), file ids are never reused, and
+readers open their own file handles — so the only read/write race is a
+reader holding a pointer into a file that eviction or the merge service
+just removed, which surfaces as ``FileNotFoundError`` and is handled by
+the store's read-retry loop (re-resolve pointers from the index).
 """
 
 from __future__ import annotations
 
 import os
 import struct
+import threading
 import zlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Sequence, Tuple
@@ -48,9 +58,11 @@ class TensorLog:
         os.makedirs(root, exist_ok=True)
         self.max_file_bytes = max_file_bytes
         self.fsync_writes = fsync_writes
+        self._lock = threading.RLock()  # guards appends + bookkeeping; reads are lock-free
         self._files: Dict[int, dict] = {}  # id -> {size, live, path}
         self._active_id = -1
         self._active_f = None
+        self.seq_reads = 0
         self._recover()
 
     # -- bookkeeping ---------------------------------------------------------
@@ -77,25 +89,35 @@ class TensorLog:
 
     @property
     def file_count(self) -> int:
-        return len(self._files)
+        with self._lock:
+            return len(self._files)
 
     @property
     def total_bytes(self) -> int:
-        return sum(f["size"] for f in self._files.values())
+        with self._lock:
+            return sum(f["size"] for f in self._files.values())
 
     def garbage_ratio(self, file_id: int) -> float:
-        f = self._files[file_id]
-        return 1.0 - (f["live"] / f["size"]) if f["size"] else 0.0
+        with self._lock:
+            f = self._files[file_id]
+            return 1.0 - (f["live"] / f["size"]) if f["size"] else 0.0
 
     def file_ids(self) -> List[int]:
-        return sorted(self._files)
+        with self._lock:
+            return sorted(self._files)
 
     # -- writes --------------------------------------------------------------
     def append(self, key: bytes, payload: bytes) -> LogPointer:
         return self.append_batch([(key, payload)])[0]
 
     def append_batch(self, records: Sequence[Tuple[bytes, bytes]]) -> List[LogPointer]:
-        """Append records contiguously; one write syscall for the batch."""
+        """Append records contiguously; one write syscall for the batch.
+        Serialized by the log lock; the flush before return makes every
+        returned pointer immediately readable by lock-free readers."""
+        with self._lock:
+            return self._append_batch_locked(records)
+
+    def _append_batch_locked(self, records: Sequence[Tuple[bytes, bytes]]) -> List[LogPointer]:
         self._open_active()
         finfo = self._files[self._active_id]
         base = finfo["size"]
@@ -116,9 +138,10 @@ class TensorLog:
         return ptrs
 
     def mark_dead(self, ptr: LogPointer) -> None:
-        f = self._files.get(ptr.file_id)
-        if f is not None:
-            f["live"] = max(0, f["live"] - ptr.length)
+        with self._lock:
+            f = self._files.get(ptr.file_id)
+            if f is not None:
+                f["live"] = max(0, f["live"] - ptr.length)
 
     # -- reads ---------------------------------------------------------------
     def read(self, ptr: LogPointer) -> Tuple[bytes, bytes]:
@@ -128,12 +151,16 @@ class TensorLog:
         return self._parse(raw, ptr)
 
     @staticmethod
-    def _parse(raw: bytes, ptr: LogPointer) -> Tuple[bytes, bytes]:
+    def _parse(raw, ptr: LogPointer) -> Tuple[bytes, "memoryview"]:
+        """Parse one record.  ``raw`` may be bytes or a memoryview into a
+        larger read; the returned payload is a zero-copy view — per-block
+        GIL-held memcpys were a measurable serial fraction of batch reads.
+        CRC runs over the view (crc32 releases the GIL on large buffers)."""
         crc, klen, plen = _HDR.unpack_from(raw)
-        body = raw[_HDR.size : _HDR.size + klen + plen]
+        body = memoryview(raw)[_HDR.size : _HDR.size + klen + plen]
         if zlib.crc32(body) & 0xFFFFFFFF != crc:
             raise IOError(f"tensor-log CRC mismatch at {ptr}")
-        return body[:klen], body[klen:]
+        return bytes(body[:klen]), body[klen:]
 
     def read_batch(self, ptrs: Sequence[LogPointer]) -> List[Tuple[bytes, bytes]]:
         """Coalescing batch read: pointers are grouped per file, sorted by
@@ -143,7 +170,7 @@ class TensorLog:
         for i, p in enumerate(ptrs):
             by_file.setdefault(p.file_id, []).append((i, p))
         out: List = [None] * len(ptrs)
-        self.seq_reads = getattr(self, "seq_reads", 0)
+        seq_reads = 0
         for fid, lst in by_file.items():
             lst.sort(key=lambda ip: ip[1].offset)
             with open(self._path(fid), "rb") as f:
@@ -157,12 +184,14 @@ class TensorLog:
                         end = max(end, lst[k][1].offset + lst[k][1].length)
                         k += 1
                     f.seek(start)
-                    chunk = f.read(end - start)
-                    self.seq_reads += 1
+                    chunk = memoryview(f.read(end - start))
+                    seq_reads += 1
                     for idx, p in lst[j:k]:
                         raw = chunk[p.offset - start : p.offset - start + p.length]
                         out[idx] = self._parse(raw, p)
                     j = k
+        with self._lock:
+            self.seq_reads += seq_reads
         return out
 
     def scan_file(self, file_id: int) -> Iterator:
@@ -183,21 +212,24 @@ class TensorLog:
                 off += ptr.length
 
     def remove_file(self, file_id: int) -> None:
-        if self._active_id == file_id and self._active_f is not None:
-            self._active_f.close()
-            self._active_f = None
-        try:
-            os.remove(self._path(file_id))
-        except OSError:
-            pass
-        self._files.pop(file_id, None)
+        with self._lock:
+            if self._active_id == file_id and self._active_f is not None:
+                self._active_f.close()
+                self._active_f = None
+            try:
+                os.remove(self._path(file_id))
+            except OSError:
+                pass
+            self._files.pop(file_id, None)
 
     def sync(self) -> None:
-        if self._active_f is not None:
-            self._active_f.flush()
-            os.fsync(self._active_f.fileno())
+        with self._lock:
+            if self._active_f is not None:
+                self._active_f.flush()
+                os.fsync(self._active_f.fileno())
 
     def close(self) -> None:
-        if self._active_f is not None:
-            self._active_f.close()
-            self._active_f = None
+        with self._lock:
+            if self._active_f is not None:
+                self._active_f.close()
+                self._active_f = None

@@ -8,23 +8,43 @@ Request lifecycle (paper Fig. 6):
 Production concerns implemented here:
   * continuous batching with a token budget per engine step,
   * TTFT accounting split into measured I/O + (modeled or real) compute,
-  * straggler mitigation: hedged disk reads — if a block promotion exceeds
-    ``hedge_factor`` x the EWMA read latency, the read is re-issued and the
-    faster attempt wins (both measured; duplicate I/O is accounted),
-  * scheduled maintenance (LSM compaction / file merging) between batches,
-    mirroring the paper's "scheduled compaction cycles".
+  * a two-stage pipeline (``runtime=RuntimeServices(...)``): while batch k
+    is being served, batch k+1's disk fetches (probe + batched get) are
+    already running on the I/O executor — ``hierarchy.plan`` on the engine
+    thread, ``hierarchy.fetch`` on the pool, ``hierarchy.fulfill`` back on
+    the engine thread.  TTFT then pays only the *non-overlapped* remainder
+    of the I/O (``io_wait``), not the full promotion,
+  * write-behind commits: the disk write-through rides the runtime's
+    ``CommitQueue`` drain thread instead of the request,
+  * straggler mitigation: hedged disk reads — when a fetch future exceeds
+    ``hedge_factor`` x the EWMA fetch latency, a second fetch is issued on
+    the executor and the faster attempt wins (duplicate I/O is accounted).
+    Without a runtime the legacy inline re-issue path is used,
+  * scheduled maintenance (LSM compaction / file merging) between batches —
+    run through ``MaintenanceService`` off the request path when a runtime
+    is attached, inline otherwise.
+
+Concurrency contract for the stats: ``EngineStats`` is only ever mutated
+on the engine thread.  Worker-side counters live in the runtime services'
+own locked stats objects and are folded in via ``harvest()`` /
+``runtime_report()`` on the engine thread, so totals stay consistent
+without putting a lock on the request path.
 """
 
 from __future__ import annotations
 
 import time
 from collections import deque
+from concurrent.futures import FIRST_COMPLETED
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..cache.hierarchy import CacheHierarchy
+from ..cache.hierarchy import AcquirePlan, CacheHierarchy, DiskFetch
+from ..runtime import RuntimeServices
 from .compute_model import ComputeModel
 
 
@@ -34,9 +54,11 @@ class RequestRecord:
     prompt_len: int
     reused_tokens: int = 0
     io_s: float = 0.0
+    io_wait_s: float = 0.0  # non-overlapped wait on the prefetch future
     compute_s: float = 0.0
     ttft_s: float = 0.0
     hedged: bool = False
+    prefetched: bool = False
     stage: int = -1
 
 
@@ -51,6 +73,12 @@ class EngineStats:
     maintenance_compactions: int = 0
     evicted_files: int = 0
 
+    # pipeline accounting (engine-thread-only writers; see module docstring)
+    prefetched_requests: int = 0
+    prefetch_ready: int = 0  # future already resolved when the engine needed it
+    io_wait_s: float = 0.0  # I/O the pipeline could NOT hide (charged to TTFT)
+    overlap_io_s: float = 0.0  # I/O executed under the previous batch's service
+
     ttfts: List[float] = field(default_factory=list)
     hits: List[float] = field(default_factory=list)
 
@@ -63,6 +91,16 @@ class EngineStats:
         return float(np.mean(self.hits)) if self.hits else 0.0
 
 
+@dataclass
+class _Staged:
+    """A request whose acquire phases 1(+2) already ran (``plan`` is None
+    in the no-runtime path, where acquire plans internally)."""
+
+    req: object
+    plan: Optional[AcquirePlan]
+    future: Optional[object] = None  # Future[DiskFetch] when prefetched
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -73,7 +111,18 @@ class ServingEngine:
         hedge_factor: float = 4.0,
         maintenance_every: int = 8,
         real_prefill: Optional[Callable] = None,
+        runtime: Optional[RuntimeServices] = None,
+        pipeline: Optional[bool] = None,
+        simulate_compute_wall: bool = False,
     ):
+        """``simulate_compute_wall``: when compute is *modeled* (no
+        ``real_prefill``), additionally occupy real wall-clock time for the
+        modeled duration (a GIL-releasing sleep — the engine thread is
+        "waiting on the accelerator").  This is what makes overlap
+        measurable end to end on a CPU-only container: the I/O executor
+        prefetches into exactly the window a GPU deployment would expose.
+        Off by default (tests and hit-rate benchmarks don't want the wall
+        time)."""
         self.h = hierarchy
         self.compute = compute
         self.kv_bytes_per_token = kv_bytes_per_token
@@ -81,8 +130,21 @@ class ServingEngine:
         self.hedge_factor = hedge_factor
         self.maintenance_every = maintenance_every
         self.real_prefill = real_prefill  # (tokens, reused) -> (blocks, seconds)
+        self.simulate_compute_wall = simulate_compute_wall
+        self.runtime = runtime
+        # pipeline defaults to on exactly when an async runtime is attached
+        self.pipeline = bool(runtime and runtime.async_mode) if pipeline is None else bool(pipeline)
+        if runtime is not None:
+            # wire the write-behind queue into the hierarchy (unless the
+            # caller attached their own) and bind off-path maintenance
+            if self.h.commit_queue is None and runtime.commits is not None:
+                self.h.commit_queue = runtime.commits
+            self._maintenance = runtime.bind_maintenance(self.h.maintenance)
+        else:
+            self._maintenance = None
         self.stats = EngineStats()
         self._queue: Deque = deque()  # popleft is O(1); list.pop(0) was O(n)
+        self._staged: Optional[List[_Staged]] = None  # batch k+1, prefetching
         self._batches = 0
         self._ewma_read_s: float = 0.0
         self._block_template: Optional[np.ndarray] = None
@@ -93,13 +155,24 @@ class ServingEngine:
 
     def run(self) -> List[RequestRecord]:
         out = []
-        while self._queue:
+        while self._queue or self._staged:
             out.extend(self.step())
         return out
 
-    def step(self) -> List[RequestRecord]:
-        """One continuous-batching iteration: take requests up to the token
-        budget, serve each (acquire -> prefill -> commit), run maintenance."""
+    def drain(self) -> None:
+        """Quiesce the runtime (flush write-behind, finish maintenance) and
+        fold its counters into the engine stats."""
+        if self.runtime is not None:
+            self.runtime.drain()
+            self._harvest_maintenance()
+
+    def close(self) -> None:
+        if self.runtime is not None:
+            self.drain()
+            self.runtime.close()
+
+    # ------------------------------------------------------- batch formation
+    def _form_batch(self) -> List:
         batch, tokens = [], 0
         while self._queue and tokens + len(self._queue[0].tokens) <= self.max_batch_tokens:
             r = self._queue.popleft()
@@ -107,19 +180,74 @@ class ServingEngine:
             tokens += len(r.tokens)
         if not batch and self._queue:  # oversized single request
             batch.append(self._queue.popleft())
-        records = [self._serve_one(r) for r in batch]
+        return batch
+
+    def _stage(self, batch: List, prefetch: bool) -> List[_Staged]:
+        """Phase 1 for every request (engine thread); optionally launch
+        phase 2 on the executor (prefetch-ahead)."""
+        staged = []
+        ex = self.runtime.executor if self.runtime is not None else None
+        for r in batch:
+            if ex is None:
+                # no runtime: the legacy acquire path re-plans internally,
+                # so planning here would walk the radix tree twice
+                staged.append(_Staged(req=r, plan=None))
+                continue
+            plan = self.h.plan(r.tokens)
+            fut = None
+            # never stall the engine thread on the admission gate: if the
+            # pool is saturated, leave the fetch to _resolve_fetch (it will
+            # run at serve time, when slots have freed)
+            if prefetch and plan.need_disk and ex is not None and ex.in_flight < ex.max_pending:
+                fut = ex.submit(self.h.fetch, plan)
+                self.stats.prefetched_requests += 1
+            staged.append(_Staged(req=r, plan=plan, future=fut))
+        return staged
+
+    def step(self) -> List[RequestRecord]:
+        """One continuous-batching iteration.  Serial mode: take a batch,
+        serve it, run maintenance.  Pipelined mode: serve the batch whose
+        fetches were launched last step, while this step launches the
+        fetches of the next one."""
+        can_prefetch = self.pipeline and self.runtime is not None and self.runtime.async_mode
+        if self._staged is not None:
+            current = self._staged
+            self._staged = None
+        else:
+            # first batch of a burst: no earlier step staged it, but its
+            # fetches still fan out on the executor (intra-batch overlap) —
+            # and they must be submitted BEFORE the next batch's prefetch
+            # so the FIFO pool serves the batch we are about to block on
+            current = self._stage(self._form_batch(), prefetch=can_prefetch)
+        if can_prefetch:
+            nxt = self._stage(self._form_batch(), prefetch=True)
+            self._staged = nxt or None
+        records = [self._serve_one(s) for s in current]
         self._batches += 1
         if self._batches % self.maintenance_every == 0:
-            rep = self.h.maintenance()
-            self.stats.maintenance_runs += 1
-            self.stats.maintenance_compactions += int(rep.get("compactions", 0) or 0)
-            self.stats.evicted_files += int(rep.get("evicted_files", 0) or 0)
+            if self._maintenance is not None and self.runtime.async_mode:
+                self._maintenance.maybe_schedule()
+                self.stats.maintenance_runs += 1
+            else:
+                rep = self._maintenance.run_inline() if self._maintenance else self.h.maintenance()
+                self.stats.maintenance_runs += 1
+                if self._maintenance is None:
+                    self.stats.maintenance_compactions += int(rep.get("compactions", 0) or 0)
+                    self.stats.evicted_files += int(rep.get("evicted_files", 0) or 0)
+        self._harvest_maintenance()
         return records
+
+    def _harvest_maintenance(self) -> None:
+        if self._maintenance is None:
+            return
+        got = self._maintenance.harvest()
+        self.stats.maintenance_compactions += got.compactions
+        self.stats.evicted_files += got.evicted_files
 
     # ------------------------------------------------------------- serving
     def _acquire_hedged(self, tokens):
-        """Hedged promotion: re-issue the disk read when it exceeds
-        hedge_factor x EWMA latency (straggler mitigation)."""
+        """Legacy inline hedging (no runtime attached): re-issue the whole
+        promotion when it exceeds hedge_factor x EWMA latency."""
         t0 = time.perf_counter()
         acq = self.h.acquire(tokens)
         dt = time.perf_counter() - t0
@@ -143,10 +271,62 @@ class ServingEngine:
         self._ewma_read_s = 0.9 * self._ewma_read_s + 0.1 * dt if self._ewma_read_s else dt
         return acq, dt, hedged
 
-    def _serve_one(self, req) -> RequestRecord:
+    def _resolve_fetch(self, st: _Staged) -> Tuple[DiskFetch, float, bool]:
+        """Obtain the DiskFetch for a staged request: wait on the prefetch
+        future (hedging stragglers on the executor) or, if none was
+        launched, run the fetch through the executor now.  Returns
+        (fetch, wait_seconds, hedged)."""
+        ex = self.runtime.executor
+        fut = st.future
+        if fut is None:
+            if not st.plan.need_disk:
+                return DiskFetch(), 0.0, False
+            fut = ex.submit(self.h.fetch, st.plan)
+        elif fut.done():
+            self.stats.prefetch_ready += 1
+        t0 = time.perf_counter()
+        hedged = False
+        timeout = self.hedge_factor * self._ewma_read_s if self._ewma_read_s > 0 else None
+        try:
+            fetched = fut.result(timeout=timeout)
+        except FutureTimeoutError:
+            # straggler: hedge on the executor; first finished attempt wins
+            hedge = ex.submit(self.h.fetch, st.plan)
+            self.stats.hedged_reads += 1
+            self.stats.redispatches += 1
+            hedged = True
+            pending = {fut, hedge}
+            done = set()
+            while not done:
+                done, pending = futures_wait(pending, timeout=1.0, return_when=FIRST_COMPLETED)
+            fetched = next(iter(done)).result()
+        wait_s = time.perf_counter() - t0
+        if fetched.io_s > 0:
+            self._ewma_read_s = (
+                0.9 * self._ewma_read_s + 0.1 * fetched.io_s if self._ewma_read_s else fetched.io_s
+            )
+        return fetched, wait_s, hedged
+
+    def _serve_one(self, st: _Staged) -> RequestRecord:
+        req = st.req
         tokens = req.tokens
         B = self.h.block_size
-        acq, io_s, hedged = self._acquire_hedged(tokens)
+        prefetched = st.future is not None
+        if self.runtime is not None:
+            fetched, wait_s, hedged = self._resolve_fetch(st)
+            t1 = time.perf_counter()
+            acq = self.h.fulfill(st.plan, fetched)
+            install_s = time.perf_counter() - t1
+            # TTFT charges only the I/O the pipeline failed to hide: the
+            # blocking wait plus the on-thread install.  Whatever the fetch
+            # did while the previous batch was being served is overlap.
+            io_s = wait_s + install_s
+            self.stats.io_wait_s += wait_s
+            if prefetched:
+                self.stats.overlap_io_s += max(0.0, fetched.io_s - wait_s)
+        else:
+            acq, io_s, hedged = self._acquire_hedged(tokens)
+            wait_s = io_s
         reused = acq.reuse_tokens
         n_new = len(tokens) - reused
 
@@ -161,6 +341,8 @@ class ServingEngine:
                 shape = (B, max(1, self.kv_bytes_per_token // 2))
                 self._block_template = np.random.default_rng(0).standard_normal(shape).astype(np.float16)
             new_blocks = [self._block_template] * n_blocks
+            if self.simulate_compute_wall and compute_s > 0:
+                time.sleep(compute_s)  # GIL released: prefetch runs under this
         self.h.commit(tokens, new_blocks, acq)
         self.h.release(acq)
 
@@ -169,12 +351,37 @@ class ServingEngine:
             prompt_len=len(tokens),
             reused_tokens=reused,
             io_s=io_s,
+            io_wait_s=wait_s,
             compute_s=compute_s,
             ttft_s=io_s + compute_s,
             hedged=hedged,
+            prefetched=prefetched,
             stage=getattr(req, "stage", -1),
         )
         self.stats.completed += 1
         self.stats.ttfts.append(rec.ttft_s)
         self.stats.hits.append(reused / max(1, len(tokens)))
         return rec
+
+    # ---------------------------------------------------------------- report
+    def runtime_report(self) -> Dict:
+        """Engine + runtime counters in one machine-readable dict (the
+        benchmark artifact format)."""
+        out: Dict = {
+            "completed": self.stats.completed,
+            "mean_ttft_s": self.stats.mean_ttft,
+            "mean_hit": self.stats.mean_hit,
+            "hedged_reads": self.stats.hedged_reads,
+            "prefetched_requests": self.stats.prefetched_requests,
+            "prefetch_ready": self.stats.prefetch_ready,
+            "io_wait_s": self.stats.io_wait_s,
+            "overlap_io_s": self.stats.overlap_io_s,
+            "maintenance_runs": self.stats.maintenance_runs,
+            "maintenance_compactions": self.stats.maintenance_compactions,
+            "evicted_files": self.stats.evicted_files,
+            "plan_stale": self.h.stats.plan_stale,
+            "writeback_blocks": self.h.stats.writeback_blocks,
+        }
+        if self.runtime is not None:
+            out["runtime"] = self.runtime.report()
+        return out

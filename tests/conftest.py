@@ -1,8 +1,63 @@
 import os
+import signal
 import sys
+import threading
+
+import pytest
 
 # tests must see exactly 1 device (dry-run sets its own XLA_FLAGS in a
 # subprocess); keep CPU planes deterministic
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------- timeouts
+# A deadlocked lock ordering must fail fast, not hang the suite (the
+# concurrency stress tests exist precisely to catch such bugs).  CI
+# installs pytest-timeout (see pytest.ini / requirements-dev.txt); when the
+# plugin is absent (minimal local envs) this SIGALRM fallback enforces the
+# same per-test budget on the main thread — CPython lock waits are
+# signal-interruptible, so even a test stuck in Lock.acquire gets killed.
+try:
+    import pytest_timeout  # noqa: F401
+
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+_DEFAULT_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "300"))
+
+
+def pytest_configure(config):
+    if not _HAVE_PYTEST_TIMEOUT:
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test timeout (pytest-timeout fallback shim)",
+        )
+
+
+if not _HAVE_PYTEST_TIMEOUT:
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        marker = item.get_closest_marker("timeout")
+        seconds = int(marker.args[0]) if (marker and marker.args) else _DEFAULT_TIMEOUT_S
+        usable = (
+            seconds > 0
+            and hasattr(signal, "SIGALRM")
+            and threading.current_thread() is threading.main_thread()
+        )
+        if not usable:
+            yield
+            return
+
+        def _expired(signum, frame):
+            raise TimeoutError(f"test exceeded {seconds}s (conftest timeout shim)")
+
+        old = signal.signal(signal.SIGALRM, _expired)
+        signal.alarm(seconds)
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,313 @@
+"""Runtime layer units: IOExecutor, CommitQueue, MaintenanceService, the
+plan/fetch/fulfill acquire split, parallel shard fan-out, and the pipelined
+engine end-to-end."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cache.hierarchy import CacheHierarchy
+from repro.configs import get_config
+from repro.core.sharded_store import ShardedKVBlockStore
+from repro.core.store import KVBlockStore
+from repro.runtime import CommitQueue, IOExecutor, MaintenanceService, RuntimeServices
+from repro.serving import ComputeModel, ServingEngine
+from repro.workload import StagedWorkload
+
+
+# ------------------------------------------------------------- IOExecutor
+def test_executor_parallel_and_order():
+    with IOExecutor(max_workers=4) as ex:
+        out = ex.map_parallel(lambda x: x * x, list(range(20)))
+        assert out == [x * x for x in range(20)]
+        assert ex.stats.submitted >= 20
+        assert ex.stats.completed >= 20
+
+
+def test_executor_serial_mode_runs_inline():
+    ex = IOExecutor(max_workers=0)
+    tid = threading.get_ident()
+    fut = ex.submit(lambda: threading.get_ident())
+    assert fut.result() == tid  # ran on the calling thread
+    assert ex.stats.inline == 1
+    ex.close()
+
+
+def test_executor_propagates_exceptions():
+    with IOExecutor(max_workers=2) as ex:
+        fut = ex.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            fut.result(timeout=5)
+        with pytest.raises(ZeroDivisionError):
+            ex.map_parallel(lambda x: 1 / x, [1, 0, 2])
+
+
+def test_executor_backpressure_bounds_in_flight():
+    ex = IOExecutor(max_workers=2, max_pending=2)
+    gate = threading.Event()
+    futs = [ex.submit(gate.wait, 5) for _ in range(2)]
+    t = threading.Thread(target=lambda: ex.submit(lambda: None))
+    t.start()
+    time.sleep(0.05)
+    assert ex.in_flight <= 2  # third submit is blocked, not queued
+    gate.set()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    for f in futs:
+        f.result(timeout=5)
+    ex.close()
+    assert ex.stats.queue_depth_max <= 2
+
+
+# ------------------------------------------------------------- CommitQueue
+def test_commit_queue_fifo_and_flush():
+    q = CommitQueue(max_items=8)
+    seen = []
+    for i in range(16):
+        q.submit(lambda i=i: seen.append(i), nbytes=1)
+    q.flush()
+    assert seen == list(range(16))  # FIFO order preserved
+    assert q.stats.completed == 16
+    assert q.stats.enqueued_bytes == 16
+    q.close()
+    assert q.depth == 0
+
+
+def test_commit_queue_surfaces_failures_on_flush():
+    q = CommitQueue()
+    q.submit(lambda: (_ for _ in ()).throw(RuntimeError("disk full")))
+    with pytest.raises(RuntimeError, match="disk full"):
+        q.flush()
+    # the error is consumed; subsequent flushes are clean
+    q.submit(lambda: None)
+    q.flush()
+    assert q.stats.failed == 1
+    q.close()
+
+
+def test_commit_queue_backpressure_blocks_producer():
+    q = CommitQueue(max_items=2)
+    gate = threading.Event()
+    q.submit(lambda: gate.wait(5))
+    q.submit(lambda: None)
+    t0 = time.perf_counter()
+
+    def unblock():
+        time.sleep(0.05)
+        gate.set()
+
+    threading.Thread(target=unblock).start()
+    q.submit(lambda: None)  # must block until the drain catches up
+    assert time.perf_counter() - t0 > 0.02
+    q.flush()
+    assert q.stats.stall_s > 0
+    q.close()
+
+
+# ------------------------------------------------------- MaintenanceService
+def test_maintenance_service_runs_and_harvests():
+    calls = []
+
+    def cycle():
+        calls.append(1)
+        return {"compactions": 2, "evicted_files": 1}
+
+    svc = MaintenanceService(cycle)
+    assert svc.maybe_schedule()
+    svc.drain()
+    assert calls
+    got = svc.harvest()
+    assert got.compactions == 2 * len(calls)
+    assert got.evicted_files == len(calls)
+    # harvest resets
+    assert svc.harvest().compactions == 0
+    assert svc.stats.cycles == len(calls)
+
+
+def test_maintenance_service_coalesces_overlapping_schedules():
+    gate = threading.Event()
+    n = []
+
+    def cycle():
+        n.append(1)
+        gate.wait(2)
+        return {}
+
+    svc = MaintenanceService(cycle)
+    assert svc.maybe_schedule()
+    assert not svc.maybe_schedule()  # coalesced into the running cycle
+    assert not svc.maybe_schedule()
+    gate.set()
+    svc.drain()
+    assert len(n) == 2  # one running + one coalesced rerun
+
+
+def test_maintenance_service_surfaces_errors_on_drain():
+    svc = MaintenanceService(lambda: (_ for _ in ()).throw(ValueError("boom")))
+    svc.maybe_schedule()
+    with pytest.raises(ValueError, match="boom"):
+        svc.drain()
+    assert svc.stats.errors == 1
+
+
+# ------------------------------------------------- plan / fetch / fulfill
+def _mk_blocks(n, B=16, width=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((B, width)).astype(np.float16) for _ in range(n)]
+
+
+def test_acquire_equals_plan_fetch_fulfill(tmp_path):
+    store = KVBlockStore(str(tmp_path / "s"), block_size=16)
+    h = CacheHierarchy(16, 64, 64, store=store)
+    tokens = list(range(64))
+    store.put_batch(tokens, _mk_blocks(4))
+    plan = h.plan(tokens)
+    assert plan.need_disk
+    fetched = h.fetch(plan)
+    assert fetched.probed_tokens == 64
+    assert len(fetched.blocks) == 4
+    acq = h.fulfill(plan, fetched)
+    assert acq.reuse_tokens == 64
+    assert acq.disk_tokens == 64
+    h.release(acq)
+    # second acquire: all device-resident, no disk I/O needed
+    acq2 = h.acquire(tokens)
+    assert acq2.device_tokens == 64
+    h.release(acq2)
+    store.close()
+
+
+def test_fulfill_honors_commits_landed_after_plan(tmp_path):
+    """A plan staged before a commit must not clobber the fresher tree."""
+    store = KVBlockStore(str(tmp_path / "s"), block_size=16)
+    h = CacheHierarchy(16, 64, 64, store=store)
+    tokens = list(range(64))
+    plan = h.plan(tokens)  # tree is empty at plan time
+    fetched = h.fetch(plan)
+    # meanwhile the engine commits the same prompt (batch k finishing)
+    acq0 = h.acquire(tokens)
+    h.commit(tokens, _mk_blocks(4), acq0)
+    h.release(acq0)
+    acq = h.fulfill(plan, fetched)
+    assert acq.reuse_tokens == 64  # re-match saw the committed chain
+    assert h.stats.plan_stale >= 1
+    h.release(acq)
+    store.close()
+
+
+def test_write_behind_commit_populates_disk(tmp_path):
+    q = CommitQueue()
+    store = KVBlockStore(str(tmp_path / "s"), block_size=16)
+    h = CacheHierarchy(16, 64, 64, store=store, commit_queue=q)
+    tokens = list(range(64))
+    acq = h.acquire(tokens)
+    h.commit(tokens, _mk_blocks(4), acq)
+    h.release(acq)
+    assert h.stats.writeback_blocks == 4
+    q.flush()
+    assert store.probe(tokens) == 64  # the drain thread wrote it through
+    q.close()
+    store.close()
+
+
+# ------------------------------------------------------- parallel fan-out
+def _routed_streams(n_seqs, block=16, blocks_per_seq=4, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 50000, size=block * blocks_per_seq).tolist() for _ in range(n_seqs)]
+
+
+@pytest.mark.parametrize("io_threads", [0, 4])
+def test_sharded_many_ops_match_serial(tmp_path, io_threads):
+    store = ShardedKVBlockStore(
+        str(tmp_path / f"s{io_threads}"), n_shards=4, block_size=16, io_threads=io_threads
+    )
+    seqs = _routed_streams(12)
+    blocks = _mk_blocks(4)
+    wrote = store.put_many([(t, blocks, 0) for t in seqs])
+    assert all(w == 4 for w in wrote)
+    probes = store.probe_many(seqs)
+    assert probes == [64] * len(seqs)
+    got = store.get_many([(t, p) for t, p in zip(seqs, probes)])
+    for g in got:
+        assert len(g) == 4
+        np.testing.assert_allclose(g[0], blocks[0], rtol=0.02, atol=0.05)
+    # positional mapping: mutate one sequence, results stay aligned
+    assert store.probe_many([seqs[3], [1, 2, 3] * 16, seqs[5]])[1] == 0
+    assert store.stats.put_blocks == 4 * len(seqs)
+    store.close()
+
+
+# ---------------------------------------------------------- engine pipeline
+def _mk_engine(tmp_path, io_threads, device_blocks=8, host_blocks=8):
+    cfg = get_config("glm4-9b")
+    rt = RuntimeServices(io_threads=io_threads) if io_threads else None
+    store = ShardedKVBlockStore(
+        str(tmp_path / f"eng{io_threads}"), n_shards=4, block_size=16, io_threads=io_threads
+    )
+    h = CacheHierarchy(16, device_blocks, host_blocks, store=store)
+    eng = ServingEngine(
+        h, ComputeModel(cfg), kv_bytes_per_token=256, max_batch_tokens=1024, runtime=rt
+    )
+    return eng, store
+
+
+def test_pipelined_engine_prefetches_and_matches_serial_hits(tmp_path):
+    wl_kwargs = dict(
+        prompt_len=128, requests_per_stage=12, stages=(0.9,), block_size=16, corpus_size=4, seed=5
+    )
+    hits = {}
+    for io_threads in (0, 4):
+        eng, store = _mk_engine(tmp_path, io_threads)
+        wl = StagedWorkload(**wl_kwargs)
+        for p in wl.warmup_prompts(4 * 128):
+            eng.submit(type("R", (), {"tokens": p, "rid": -1, "stage": -1})())
+        eng.run()
+        eng.drain()  # write-behind settled: both modes start from the same disk state
+        recs = []
+        for r in wl.stage_requests(0):
+            eng.submit(r)
+        recs = eng.run()
+        eng.drain()
+        hits[io_threads] = float(np.mean([r.reused_tokens / r.prompt_len for r in recs]))
+        if io_threads:
+            assert eng.pipeline
+            assert eng.stats.prefetched_requests > 0
+            rep = eng.runtime_report()
+            assert rep["runtime"]["executor"]["submitted"] > 0
+        eng.close()
+        store.close()
+    # pipelining must not change what the cache returns
+    assert hits[4] == pytest.approx(hits[0], abs=0.12)
+
+
+def test_hedged_fetch_reissued_on_executor(tmp_path):
+    """A stalled prefetch future is hedged with a second executor fetch and
+    the faster attempt wins."""
+    from repro.cache.hierarchy import DiskFetch
+
+    eng, store = _mk_engine(tmp_path, io_threads=2)
+    calls = {"n": 0}
+
+    def slow_then_fast(plan):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.5)
+        return DiskFetch(probed_tokens=0, blocks=[], io_s=0.001)
+
+    eng.h.fetch = slow_then_fast
+    eng._ewma_read_s = 1e-3  # 0.5s >> 4 x 1ms -> hedge trips
+    tokens = list(range(64))
+    plan = eng.h.plan(tokens)
+    plan.total_blocks = 4  # force need_disk so a future is created
+    from repro.serving.engine import _Staged
+
+    fut = eng.runtime.executor.submit(eng.h.fetch, plan)
+    fetched, wait_s, hedged = eng._resolve_fetch(_Staged(req=None, plan=plan, future=fut))
+    assert hedged
+    assert eng.stats.hedged_reads == 1
+    assert calls["n"] == 2
+    assert wait_s < 0.5  # the hedge won, we did not wait out the straggler
+    eng.close()
+    store.close()
