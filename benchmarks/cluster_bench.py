@@ -1,0 +1,370 @@
+"""Cluster benchmark: horizontal scale-out of the socket-served cache.
+
+Three measurements, all against real ``repro.cluster.node`` child
+processes on localhost driven by one ``ClusterKVBlockStore`` client:
+
+1. CAPACITY SCALE-OUT (the headline number, and the paper's enterprise
+   claim): every node gets the *same fixed cache budget* — the
+   deployment shape, where adding nodes is how aggregate capacity
+   grows.  A corpus sized to the 4-node aggregate is committed and then
+   read back: a 1-node cluster can only hold ~1/4 of it (FIFO file
+   eviction enforces the budget), so most ``get_many`` reads come back
+   empty and the blocks must be recomputed upstream; 4 nodes hold the
+   whole working set and serve it in full.  Sustained *served-block*
+   throughput (blocks actually returned per second) is the metric —
+   capacity, hit rate, and serving rate in one number, exactly what the
+   engine sees.
+
+2. SERVING RATE (fixed working set, unbudgeted): the same corpus is
+   fully resident at every node count, so the sweep isolates request
+   fan-out.  Reported with measured CPU utilization (client + node
+   processes vs wall) because container environments serialize much of
+   the cross-process socket work — on this class of host, two fully
+   independent client/node pairs sustain only ~1.1x one pair, so
+   near-flat serving-rate scaling reflects the sandbox, not the
+   architecture.  See docs/BENCHMARKS.md.
+
+3. FAILOVER: an R=2 cluster loses a node after commit and must serve
+   every committed block from the survivor (zero lost blocks;
+   ``examples/failover.py`` demonstrates the full kill/rejoin story).
+
+``run()`` writes the ``cluster`` artifact and returns the dict
+``benchmarks/run.py`` serializes into ``BENCH_cluster.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster import ClusterKVBlockStore, spawn_local_node
+
+from . import common
+
+
+# ------------------------------------------------------------------ corpus
+def make_corpus(
+    n_seqs: int,
+    blocks_per_seq: int,
+    block_tokens: int,
+    kv_bytes_per_token: int,
+    seed: int = 7,
+) -> Tuple[List[List[int]], List[List[np.ndarray]]]:
+    """Synthetic prefix corpus: distinct token sequences plus smooth
+    low-magnitude KV blocks (int8-quantizable, mildly compressible —
+    the regime the on-disk codec is tuned for)."""
+    rng = np.random.default_rng(seed)
+    feat = kv_bytes_per_token // 4  # f32 features per token
+    seqs, blocks = [], []
+    for _ in range(n_seqs):
+        seqs.append(rng.integers(1, 50_000, size=blocks_per_seq * block_tokens,
+                                 dtype=np.int64).tolist())
+        scale = rng.uniform(0.5, 2.0)
+        blocks.append([
+            (scale * rng.standard_normal((block_tokens, feat))).astype(np.float32)
+            for _ in range(blocks_per_seq)
+        ])
+    return seqs, blocks
+
+
+def _proc_cpu_s(pid: int) -> Optional[float]:
+    """CPU seconds of ``pid`` via procfs; ``None`` where /proc does not
+    exist (macOS) or the process is gone."""
+    try:
+        with open(f"/proc/{pid}/stat") as f:
+            parts = f.read().split()
+    except OSError:
+        return None
+    return (int(parts[13]) + int(parts[14])) / os.sysconf("SC_CLK_TCK")
+
+
+class _LocalCluster:
+    """n spawned node processes + one connected ClusterKVBlockStore."""
+
+    def __init__(self, n_nodes: int, block_tokens: int, replication: int = 1,
+                 node_io_threads: int = 2, client_io_threads: int = 16,
+                 backend: str = "lsm", codec: str = "int8-zlib",
+                 budget_bytes: int = 0, vlog_file_bytes: int = 0):
+        self.roots = [tempfile.mkdtemp(prefix=f"clbench_{n_nodes}n_{i}_")
+                      for i in range(n_nodes)]
+        self.nodes = [
+            spawn_local_node(root, block_size=block_tokens, backend=backend,
+                             codec=codec, io_threads=node_io_threads,
+                             budget_bytes=budget_bytes,
+                             vlog_file_bytes=vlog_file_bytes)
+            for root in self.roots
+        ]
+        self.store = ClusterKVBlockStore(
+            [n.address for n in self.nodes],
+            replication=replication,
+            block_size=block_tokens,
+            io_threads=client_io_threads,
+            node_ids=[f"node-{i}" for i in range(n_nodes)],  # stable placement
+        )
+
+    def cpu_s(self) -> Optional[float]:
+        """CPU seconds consumed so far by the node processes + this one;
+        ``None`` on hosts without procfs."""
+        samples = [_proc_cpu_s(n.proc.pid) for n in self.nodes if n.alive]
+        samples.append(_proc_cpu_s(os.getpid()))
+        if any(s is None for s in samples):
+            return None
+        return sum(samples)
+
+    def kill_node(self, idx: int) -> None:
+        self.nodes[idx].kill()
+
+    def close(self) -> None:
+        self.store.close()
+        for n in self.nodes:
+            n.close()
+        for root in self.roots:
+            shutil.rmtree(root, ignore_errors=True)
+
+
+# ------------------------------------------------------- capacity scale-out
+def capacity_sweep(
+    node_counts: Sequence[int] = (1, 2, 4),
+    n_seqs: int = 96,
+    blocks_per_seq: int = 12,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 1024,
+    budget_slack: float = 1.4,
+    repeats: int = 3,
+    codec: str = "int8",
+    verbose: bool = True,
+) -> Dict:
+    """Fixed per-node budget sized so max(node_counts) nodes hold the
+    whole corpus (with ``budget_slack`` headroom for placement skew and
+    store overhead) — fewer nodes must evict.  A calibration pass
+    measures the corpus's actual on-disk footprint (codec + index
+    overhead included), so budgets are exact for any codec."""
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token)
+    n_tokens = blocks_per_seq * block_tokens
+    total_blocks = n_seqs * blocks_per_seq
+    corpus_bytes = total_blocks * block_tokens * kv_bytes_per_token
+    get_items = [(s, n_tokens) for s in seqs]
+    put_items = [(s, bs, 0) for s, bs in zip(seqs, blocks)]
+
+    # calibration: one unbudgeted node measures the true disk footprint
+    cal = _LocalCluster(1, block_tokens, backend="lsm", codec=codec)
+    try:
+        cal.store.put_many(put_items)
+        cal.store.flush()
+        disk_footprint = cal.store.disk_bytes
+    finally:
+        cal.close()
+    budget = int(disk_footprint * budget_slack / max(node_counts))
+
+    out: Dict = {
+        "corpus_bytes": corpus_bytes,
+        "total_blocks": total_blocks,
+        "disk_footprint_bytes": disk_footprint,
+        "per_node_budget_bytes": budget,
+        "budget_slack": budget_slack,
+        "codec": codec,
+        "nodes": {},
+    }
+    for n in node_counts:
+        cl = _LocalCluster(n, block_tokens, backend="lsm", codec=codec,
+                           budget_bytes=budget, vlog_file_bytes=budget // 8)
+        try:
+            cl.store.put_many(put_items)
+            cl.store.flush()
+            cl.store.maintenance()  # deterministic budget enforcement
+            best, served = 0.0, 0
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                got = cl.store.get_many(get_items)
+                dt = time.perf_counter() - t0
+                served = sum(len(g) for g in got)
+                best = max(best, served / dt)
+            row = {
+                "served_blocks_per_s": best,
+                "served_fraction": served / total_blocks,
+                "disk_bytes": cl.store.disk_bytes,
+            }
+        finally:
+            cl.close()
+        out["nodes"][n] = row
+        if verbose:
+            print(f"  {n} node(s) @ {budget >> 20}MiB/node: "
+                  f"served {row['served_fraction']:5.1%} of corpus at "
+                  f"{best:7.0f} blk/s")
+    base = out["nodes"][min(out["nodes"])]
+    for n, row in out["nodes"].items():
+        row["speedup"] = row["served_blocks_per_s"] / base["served_blocks_per_s"]
+    if verbose:
+        top = max(out["nodes"])
+        print(f"  {top}-node served-block throughput vs 1-node: "
+              f"{out['nodes'][top]['speedup']:.2f}x")
+    return out
+
+
+# --------------------------------------------------------- serving rate
+def serving_sweep(
+    node_counts: Sequence[int] = (1, 2, 4),
+    n_seqs: int = 32,
+    blocks_per_seq: int = 32,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 1024,
+    repeats: int = 5,
+    node_io_threads: int = 2,
+    client_io_threads: int = 16,
+    verbose: bool = True,
+) -> Dict:
+    """Best-of-``repeats`` throughput per node count over a fully
+    resident working set (shared-container noise policy: the best
+    sample is the least-perturbed one; every cluster size serves the
+    byte-identical corpus)."""
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token)
+    n_tokens = blocks_per_seq * block_tokens
+    total_blocks = n_seqs * blocks_per_seq
+    get_items = [(s, n_tokens) for s in seqs]
+    put_items = [(s, bs, 0) for s, bs in zip(seqs, blocks)]
+
+    out: Dict = {
+        "cpu_count": os.cpu_count(),
+        "n_seqs": n_seqs,
+        "blocks_per_seq": blocks_per_seq,
+        "block_tokens": block_tokens,
+        "kv_bytes_per_token": kv_bytes_per_token,
+        "node_io_threads": node_io_threads,
+        "client_io_threads": client_io_threads,
+        "nodes": {},
+    }
+    for n in node_counts:
+        cl = _LocalCluster(n, block_tokens, node_io_threads=node_io_threads,
+                           client_io_threads=client_io_threads)
+        try:
+            t0 = time.perf_counter()
+            wrote = cl.store.put_many(put_items)
+            cl.store.flush()
+            put_s = time.perf_counter() - t0
+            assert sum(wrote) == total_blocks, (sum(wrote), total_blocks)
+
+            cl.store.get_many(get_items)  # warm page cache + pools
+            best_get, best_probe = 0.0, 0.0
+            cpu0, w0 = cl.cpu_s(), time.perf_counter()
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                got = cl.store.get_many(get_items)
+                dt = time.perf_counter() - t0
+                assert all(len(g) == blocks_per_seq for g in got)
+                best_get = max(best_get, total_blocks / dt)
+
+                t0 = time.perf_counter()
+                hits = cl.store.probe_many(seqs)
+                dt = time.perf_counter() - t0
+                assert all(h == n_tokens for h in hits)
+                best_probe = max(best_probe, total_blocks / dt)
+            cpu1 = cl.cpu_s()
+            util = (
+                (cpu1 - cpu0) / (time.perf_counter() - w0)
+                if cpu0 is not None and cpu1 is not None
+                else None
+            )
+
+            rep = cl.store.report()
+            row = {
+                "get_blocks_per_s": best_get,
+                "put_blocks_per_s": total_blocks / put_s,
+                "probe_blocks_per_s": best_probe,
+                "cpu_utilization": util,
+                "rpcs": sum(r["rpcs"] for r in rep["rpc"].values()),
+                "bytes_received": sum(r["bytes_received"] for r in rep["rpc"].values()),
+            }
+        finally:
+            cl.close()
+        out["nodes"][n] = row
+        if verbose:
+            util_s = f"{util:.2f} cores" if util is not None else "n/a"
+            print(f"  {n} node(s): get {best_get:8.0f} blk/s   "
+                  f"put {row['put_blocks_per_s']:6.0f} blk/s   "
+                  f"probe {best_probe:8.0f} blk/s   util {util_s}")
+    base = out["nodes"][min(out["nodes"])]
+    for n, row in out["nodes"].items():
+        row["get_speedup"] = row["get_blocks_per_s"] / base["get_blocks_per_s"]
+    return out
+
+
+# ---------------------------------------------------------------- failover
+def failover_check(
+    n_seqs: int = 12,
+    blocks_per_seq: int = 16,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 512,
+    verbose: bool = True,
+) -> Dict:
+    """R=2 over 2 nodes; SIGKILL one after commit; every committed block
+    must still be served by the survivor."""
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token, seed=13)
+    n_tokens = blocks_per_seq * block_tokens
+    cl = _LocalCluster(2, block_tokens, replication=2)
+    try:
+        cl.store.put_many([(s, bs, 0) for s, bs in zip(seqs, blocks)])
+        cl.store.flush()
+        cl.kill_node(0)
+        lost = 0
+        for s, bs in zip(seqs, blocks):
+            got = cl.store.get_batch(s, n_tokens)
+            lost += blocks_per_seq - len(got)
+            for want, have in zip(bs, got):
+                np.testing.assert_allclose(
+                    have, want, atol=0.1, rtol=0.1)  # int8 quantization error
+        rep = cl.store.report()
+        out = {
+            "replication": 2,
+            "committed_blocks": n_seqs * blocks_per_seq,
+            "lost_committed_blocks": lost,
+            "down_nodes": rep["down"],
+            "cluster": rep["cluster"],
+        }
+    finally:
+        cl.close()
+    if verbose:
+        print(f"  failover: killed 1/2 nodes (R=2); lost committed blocks: "
+              f"{lost}/{out['committed_blocks']}")
+    return out
+
+
+def run(quick: bool = False, verbose: bool = True) -> Dict:
+    if verbose:
+        print(" capacity scale-out (fixed per-node budget):")
+    cap = capacity_sweep(
+        node_counts=(1, 4) if quick else (1, 2, 4),
+        repeats=3,
+        verbose=verbose,
+    )
+    if verbose:
+        print(" serving rate (fully resident working set):")
+    srv = serving_sweep(
+        node_counts=(1, 4) if quick else (1, 2, 4),
+        n_seqs=16 if quick else 32,
+        repeats=3 if quick else 5,
+        verbose=verbose,
+    )
+    fo = failover_check(verbose=verbose)
+    out = {"capacity": cap, "serving": srv, "failover": fo}
+    common.save_artifact("cluster", out)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,25 +33,25 @@ def main(argv=None):
     print("=" * 72)
 
     if "overall" not in skip:
-        print("\n[1/8] overall (paper Fig. 4: hit rate + TTFT, 3 backends) ...")
+        print("\n[1/9] overall (paper Fig. 4: hit rate + TTFT, 3 backends) ...")
         from . import overall
 
         overall.run(prompt_lens=(512,) if args.quick else (512, 1024), scale=scale)
 
     if "models_case" not in skip:
-        print("\n[2/8] models_case (paper Fig. 5a,b: per-model KV size sweep) ...")
+        print("\n[2/9] models_case (paper Fig. 5a,b: per-model KV size sweep) ...")
         from . import models_case
 
         models_case.run(scale=scale)
 
     if "dynamic_compaction" not in skip:
-        print("\n[3/8] dynamic_compaction (paper Fig. 5c: adaptive on/off) ...")
+        print("\n[3/9] dynamic_compaction (paper Fig. 5c: adaptive on/off) ...")
         from . import dynamic_compaction
 
         dynamic_compaction.run(scale=scale)
 
     if "store_scalability" not in skip:
-        print("\n[4/8] store_scalability (paper §4.2: file-count wall) ...")
+        print("\n[4/9] store_scalability (paper §4.2: file-count wall) ...")
         from . import store_scalability
 
         store_scalability.run(n_batches=24 if args.quick else 60)
@@ -61,25 +61,25 @@ def main(argv=None):
         )
 
     if "store_ops" not in skip:
-        print("\n[5/8] store_ops (paper App. B: put/probe/get micro) ...")
+        print("\n[5/9] store_ops (paper App. B: put/probe/get micro) ...")
         from . import store_ops
 
         store_ops.run()
 
     if "kernels_micro" not in skip:
-        print("\n[6/8] kernels_micro (Pallas kernels: HBM-traffic roofline) ...")
+        print("\n[6/9] kernels_micro (Pallas kernels: HBM-traffic roofline) ...")
         from . import kernels_micro
 
         kernels_micro.run()
 
     if "roofline" not in skip:
-        print("\n[7/8] roofline (dry-run artifacts -> three-term table) ...")
+        print("\n[7/9] roofline (dry-run artifacts -> three-term table) ...")
         from . import roofline
 
         roofline.run(pods=1)
 
     if "runtime" not in skip:
-        print("\n[8/8] runtime (PR 4: parallel fan-out + pipelined engine) ...")
+        print("\n[8/9] runtime (PR 4: parallel fan-out + pipelined engine) ...")
         import json
         import os
 
@@ -121,6 +121,54 @@ def main(argv=None):
         print(f"wrote BENCH_runtime.json (fan-out 4T "
               f"{fan['threads'].get(4, fan['threads'].get('4', {})).get('speedup_vs_serial_loop', 0):.2f}x, "
               f"pipelined TTFT {-100 * eng['ttft_improvement']:+.1f}%)")
+
+    if "cluster" not in skip:
+        print("\n[9/9] cluster (PR 5: socket-served cache nodes, scale-out) ...")
+        import json
+        import os
+
+        from . import cluster_bench
+
+        cb = cluster_bench.run(quick=args.quick)
+        cap, srv, fo = cb["capacity"], cb["serving"], cb["failover"]
+        top = max(int(k) for k in cap["nodes"])
+        bench = {
+            "benchmark": "cluster",
+            "capacity": {
+                "per_node_budget_bytes": cap["per_node_budget_bytes"],
+                "corpus_bytes": cap["corpus_bytes"],
+                "nodes": {
+                    str(n): {
+                        "served_blocks_per_s": row["served_blocks_per_s"],
+                        "served_fraction": row["served_fraction"],
+                        "speedup": row["speedup"],
+                    }
+                    for n, row in cap["nodes"].items()
+                },
+            },
+            "serving": {
+                "cpu_count": srv["cpu_count"],
+                "nodes": {
+                    str(n): {
+                        "get_blocks_per_s": row["get_blocks_per_s"],
+                        "get_speedup": row["get_speedup"],
+                        "cpu_utilization": row["cpu_utilization"],
+                    }
+                    for n, row in srv["nodes"].items()
+                },
+            },
+            "failover": {
+                "replication": fo["replication"],
+                "committed_blocks": fo["committed_blocks"],
+                "lost_committed_blocks": fo["lost_committed_blocks"],
+            },
+        }
+        root_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root_dir, "BENCH_cluster.json"), "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"wrote BENCH_cluster.json ({top}-node served-block throughput "
+              f"{cap['nodes'][top]['speedup']:.2f}x 1-node; failover lost "
+              f"{fo['lost_committed_blocks']} committed blocks)")
 
     print(f"\nall benchmarks done in {time.time() - t_all:.0f}s; artifacts in benchmarks/artifacts/")
     return 0

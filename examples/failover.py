@@ -1,63 +1,124 @@
-"""Fault tolerance end-to-end: a serving replica crashes mid-workload; a
-replacement reopens the SAME disk store (WAL + manifest recovery), takes
-over the unserved queue (request re-dispatch), and keeps hitting the
-prefixes the dead replica populated — nothing cached on disk is lost.
+"""Cluster fault tolerance end-to-end: a 3-node cache cluster serves a
+real workload through the unchanged ``ServingEngine``; one node is
+SIGKILLed mid-workload; serving degrades but stays *correct* (zero
+committed blocks lost — every read fails over to the surviving replica);
+the node rejoins on the same address and the ring rebalances back.
+
+The engine and hierarchy never learn any of this happened: the cluster
+store is just another ``StorageBackend``.
 
     PYTHONPATH=src python examples/failover.py
 """
 
+import shutil
 import tempfile
 
 import numpy as np
 
 from repro.cache.hierarchy import CacheHierarchy
+from repro.cluster import ClusterKVBlockStore, spawn_local_node
 from repro.configs import get_config
-from repro.core.store import KVBlockStore
 from repro.serving import ComputeModel, ServingEngine
 from repro.workload import StagedWorkload
 
 BLOCK = 16
 PROMPT = 256
+N_NODES = 3
+REPLICATION = 2
 
 
-def make_replica(root: str) -> ServingEngine:
-    store = KVBlockStore(root, block_size=BLOCK)  # reopens + recovers if exists
-    h = CacheHierarchy(BLOCK, device_budget_blocks=64, host_budget_blocks=128, store=store)
-    cfg = get_config("glm4-9b")
-    return ServingEngine(h, ComputeModel(cfg), kv_bytes_per_token=512)
+def make_engine(cluster: ClusterKVBlockStore) -> ServingEngine:
+    h = CacheHierarchy(BLOCK, device_budget_blocks=64, host_budget_blocks=128,
+                       store=cluster)
+    return ServingEngine(h, ComputeModel(get_config("glm4-9b")),
+                         kv_bytes_per_token=512)
+
+
+def hit(recs) -> float:
+    return float(np.mean([r.reused_tokens / r.prompt_len for r in recs]))
 
 
 def main():
-    root = tempfile.mkdtemp(prefix="failover_") + "/store"
+    work = tempfile.mkdtemp(prefix="failover_")
+    print(f"[cluster] spawning {N_NODES} local cache-node processes ...")
+    nodes = [
+        spawn_local_node(f"{work}/node_{i}", block_size=BLOCK, codec="raw",
+                         io_threads=2)
+        for i in range(N_NODES)
+    ]
+    cluster = ClusterKVBlockStore(
+        [n.address for n in nodes], replication=REPLICATION, io_threads=2,
+        retries=1, timeout_s=20.0,
+    )
+    print(f"[cluster] up: {[n.address for n in nodes]}, replication={REPLICATION}")
+    engine = make_engine(cluster)
+
     wl = StagedWorkload(prompt_len=PROMPT, requests_per_stage=24,
-                        stages=(0.7,), block_size=BLOCK, corpus_size=6, seed=0)
-    queue = wl.stage_requests(0)
+                        stages=(0.7, 0.7), block_size=BLOCK, corpus_size=8, seed=0)
 
-    # --- replica A serves the first half, then "crashes" hard -------------
-    a = make_replica(root)
-    for p in wl.warmup_prompts(6 * PROMPT):
-        a.submit(type("R", (), {"tokens": p, "rid": -1, "stage": -1})())
-    a.run()
-    half = len(queue) // 2
-    for r in queue[:half]:
-        a.submit(r)
-    recs_a = a.run()
-    hit_a = np.mean([r.reused_tokens / r.prompt_len for r in recs_a])
-    print(f"[replica A] served {len(recs_a)} requests, hit {hit_a:.2f}")
-    # hard crash: no close(), no flush of the memtable — WAL must cover it
-    del a
+    # --- phase 1: warm the corpus through the engine, serve stage 0 -------
+    warm_prompts = list(wl.warmup_prompts(8 * PROMPT))
+    for p in warm_prompts:
+        engine.submit(type("R", (), {"tokens": p, "rid": -1, "stage": -1})())
+    engine.run()
+    recs = []
+    for r in wl.stage_requests(0):
+        engine.submit(r)
+    recs.extend(engine.run())
+    engine.drain()  # settle write-behind: everything below counts as committed
+    committed = {i: cluster.probe(p) for i, p in enumerate(warm_prompts)}
+    print(f"[phase 1] served {len(recs)} requests over 3 nodes, "
+          f"hit {hit(recs):.2f}; committed prefixes on cluster: "
+          f"{sum(v // BLOCK for v in committed.values())} blocks")
 
-    # --- replica B recovers the store and takes over the queue ------------
-    b = make_replica(root)  # WAL replay + manifest recovery happens here
-    for r in queue[half:]:  # re-dispatch the dead replica's queue
-        b.submit(r)
-    recs_b = b.run()
-    hit_b = np.mean([r.reused_tokens / r.prompt_len for r in recs_b])
-    print(f"[replica B] recovered store ({b.h.store.index.n_entries} index entries, "
-          f"{b.h.store.file_count} files) and served {len(recs_b)} re-dispatched requests, "
-          f"hit {hit_b:.2f}")
-    assert hit_b >= 0.5, "disk-tier prefixes must survive the crash"
-    print("ok — cached prefixes survived the replica failure")
+    # --- phase 2: SIGKILL one node mid-workload ---------------------------
+    victim = cluster.replicas_for(warm_prompts[0])[0]
+    print(f"[phase 2] SIGKILL node {victim} ({nodes[victim].address}) ...")
+    nodes[victim].kill()
+    recs2 = []
+    for r in wl.stage_requests(1):
+        engine.submit(r)
+    recs2.extend(engine.run())
+    engine.drain()
+    lost = sum(1 for i, p in enumerate(warm_prompts)
+               if cluster.probe(p) < committed[i])
+    cs = cluster.cluster_stats
+    print(f"[phase 2] served {len(recs2)} requests degraded "
+          f"(down={cluster.down_nodes}), hit {hit(recs2):.2f}; "
+          f"failover reads: {cs.failovers}, degraded reads: {cs.degraded_reads}")
+    print(f"[phase 2] lost committed blocks after kill: {lost}")
+    assert lost == 0, "replication=2 must survive a single node kill"
+    assert hit(recs2) >= 0.5, "degraded cluster must keep serving cached prefixes"
+
+    # --- phase 3: rejoin on the same address; ring rebalances -------------
+    host, port = nodes[victim].address
+    shutil.rmtree(nodes[victim].root, ignore_errors=True)  # cold restart
+    nodes[victim] = spawn_local_node(f"{work}/node_{victim}", port=port,
+                                     block_size=BLOCK, codec="raw", io_threads=2)
+    revived = cluster.maintenance(0)["revived"]  # maintenance pings down nodes
+    print(f"[phase 3] node {victim} rejoined on {nodes[victim].address}: "
+          f"revived={revived}, live={cluster.live_nodes}")
+    assert revived == [victim] and not cluster.down_nodes
+    recs3 = []
+    for r in wl.stage_requests(0):  # replay stage 0 against the healed ring
+        engine.submit(r)
+    recs3.extend(engine.run())
+    engine.drain()
+    still_lost = sum(1 for i, p in enumerate(warm_prompts)
+                     if cluster.probe(p) < committed[i])
+    print(f"[phase 3] healed cluster served {len(recs3)} requests, "
+          f"hit {hit(recs3):.2f}; lost committed blocks: {still_lost} "
+          f"(cold rejoined replica is backstopped by best-of-replica reads)")
+    assert still_lost == 0
+
+    report = cluster.report()
+    print(f"[report] {report['cluster']}, "
+          f"rpcs={sum(r['rpcs'] for r in report['rpc'].values())}")
+    cluster.close()
+    for n in nodes:
+        n.close()
+    shutil.rmtree(work, ignore_errors=True)
+    print("ok — zero committed blocks lost across kill and rejoin")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve.
+
+Scans the given markdown files (and all ``*.md`` under given
+directories) for ``[text](target)`` links and verifies every relative
+target exists on disk (anchors are stripped; ``http(s)``/``mailto``
+links are skipped — CI must not depend on the network).  Exits non-zero
+listing every broken link.
+
+    python scripts/check_markdown_links.py README.md ROADMAP.md docs
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target up to the first unescaped ')'; tolerates
+# "(url \"title\")" forms by splitting on whitespace
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def collect(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _, names in os.walk(p):
+                yield from (os.path.join(dirpath, n) for n in names
+                            if n.endswith(".md"))
+        else:
+            yield p
+
+
+def check_file(path: str):
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks routinely contain literal `](` examples
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append((target, resolved))
+    return broken
+
+
+def main(argv) -> int:
+    files = sorted(set(collect(argv or ["README.md", "ROADMAP.md", "docs"])))
+    bad = 0
+    for path in files:
+        for target, resolved in check_file(path):
+            bad += 1
+            print(f"BROKEN  {path}: ({target}) -> {resolved}")
+    print(f"checked {len(files)} markdown files: "
+          f"{'all links resolve' if not bad else f'{bad} broken link(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,47 @@
+"""Cache-cluster layer: thread-safe ``StorageBackend``s served over
+sockets, consumed through a consistent-hash-routed, replicated client.
+
+This package is the *cache distribution* axis of the repo — scaling the
+disk tier across processes and hosts (LMCache-style cache cluster).  It
+is unrelated to ``repro.distributed``, which shards *model training*
+(JAX meshes).  See ``docs/ARCHITECTURE.md``.
+
+    CacheNodeServer     one node: socket RPC shim over any backend
+    RemoteKVBlockStore  StorageBackend client for one node (pooling,
+                        batched RPCs, retry)
+    ClusterKVBlockStore StorageBackend over N nodes (HashRing routing,
+                        replication, read-failover, down/rejoin tracking)
+    spawn_local_node    child-process node manager for demos/benchmarks
+"""
+
+from .client import NodeUnavailable, RemoteKVBlockStore, RpcStats
+from .cluster_store import ClusterKVBlockStore, ClusterStats
+from .node import NodeProcess, spawn_local_node
+from .protocol import (
+    MAX_FRAME_BYTES,
+    FrameTooLarge,
+    ProtocolError,
+    RemoteError,
+    TruncatedFrame,
+)
+from .ring import HashRing, key_hash
+from .server import CacheNodeServer, ServerStats
+
+__all__ = [
+    "CacheNodeServer",
+    "ServerStats",
+    "RemoteKVBlockStore",
+    "RpcStats",
+    "NodeUnavailable",
+    "ClusterKVBlockStore",
+    "ClusterStats",
+    "HashRing",
+    "key_hash",
+    "NodeProcess",
+    "spawn_local_node",
+    "ProtocolError",
+    "FrameTooLarge",
+    "TruncatedFrame",
+    "RemoteError",
+    "MAX_FRAME_BYTES",
+]

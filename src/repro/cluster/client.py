@@ -1,0 +1,272 @@
+"""``RemoteKVBlockStore`` — a ``StorageBackend`` whose storage lives in
+another process.
+
+The client speaks the frame protocol to one ``CacheNodeServer`` and
+exposes the full backend contract, so everything built against the
+protocol (``CacheHierarchy``, ``ServingEngine``, the write-behind
+``CommitQueue``, benchmarks) runs against a remote node unchanged — the
+network hop is a constructor argument, never a code change.
+
+Mechanics:
+
+* **Connection pooling** — a small pool of sockets, checked out per RPC;
+  concurrent callers (the engine's I/O executor, the commit-queue drain
+  thread) each get their own connection, so RPCs overlap instead of
+  serializing on one stream.  Thread-safe by the same coarse-lock
+  discipline as the baseline backends.
+* **Request batching** — the multi-sequence ops (``probe_many`` /
+  ``get_many`` / ``put_many``) ship as *one* RPC, so a whole engine
+  batch pays one round trip instead of one per sequence (the §3.4 batch
+  operations claim, extended across the wire).  ``put_many`` batches are
+  split when their payload would approach the frame cap.
+* **Retry** — connection-level failures (reset, truncated frame,
+  timeout) are retried on a fresh connection up to ``retries`` times.
+  Every backend op is idempotent (puts are content-addressed, probes and
+  gets are reads), so retry is always safe.  Persistent failure raises
+  ``NodeUnavailable`` — the signal ``ClusterKVBlockStore`` uses to mark
+  the node down and fail over.  ``RemoteError`` (the node ran the op and
+  *reported* a failure) is never retried.
+
+``stats`` / ``disk_bytes`` / ``file_count`` are served by the node (the
+remote store's counters); the client keeps its own transport-level
+``rpc_stats`` (RPCs, retries, bytes) for the cluster layer's telemetry.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.store import StoreStats
+from . import protocol as P
+from .server import Address
+
+
+class NodeUnavailable(ConnectionError):
+    """The node could not be reached (after retries)."""
+
+
+@dataclass
+class RpcStats:
+    rpcs: int = 0
+    retries: int = 0
+    connects: int = 0
+    failures: int = 0  # RPCs abandoned after all retries
+    bytes_sent: int = 0
+    bytes_received: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class RemoteKVBlockStore:
+    """Client-side ``StorageBackend`` over one remote cache node."""
+
+    name = "remote"
+
+    def __init__(
+        self,
+        address: Address,
+        block_size: Optional[int] = None,
+        pool_size: int = 2,
+        timeout_s: float = 30.0,
+        connect_timeout_s: float = 5.0,
+        retries: int = 2,
+        max_frame_bytes: int = P.MAX_FRAME_BYTES,
+        put_chunk_bytes: int = 32 * 1024 * 1024,
+    ):
+        """``block_size=None`` fetches it from the node at construction
+        (requires the node to be up); pass it explicitly to construct a
+        client for a node that may currently be down."""
+        self.address = address
+        self.pool_size = pool_size
+        self.timeout_s = timeout_s
+        self.connect_timeout_s = connect_timeout_s
+        self.retries = retries
+        self.max_frame_bytes = max_frame_bytes
+        self.put_chunk_bytes = put_chunk_bytes
+        self.rpc_stats = RpcStats()
+        self._lock = threading.Lock()
+        self._idle: List[socket.socket] = []
+        self._closed = False
+        if block_size is None:
+            block_size = int(self._rpc(P.OP_STATS)["block_size"])
+        self.block_size = block_size
+
+    # ------------------------------------------------------------ transport
+    def _connect(self) -> socket.socket:
+        try:
+            if isinstance(self.address, str):
+                sock = socket.socket(socket.AF_UNIX)
+                sock.settimeout(self.connect_timeout_s)
+                sock.connect(self.address)
+            else:
+                sock = socket.create_connection(
+                    tuple(self.address), timeout=self.connect_timeout_s
+                )
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError as e:
+            raise NodeUnavailable(f"connect to {self.address}: {e}") from e
+        sock.settimeout(self.timeout_s)
+        with self._lock:
+            self.rpc_stats.connects += 1
+        return sock
+
+    def _checkout(self) -> socket.socket:
+        with self._lock:
+            if self._idle:
+                return self._idle.pop()
+        return self._connect()
+
+    def _checkin(self, sock: socket.socket) -> None:
+        with self._lock:
+            if not self._closed and len(self._idle) < self.pool_size:
+                self._idle.append(sock)
+                return
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def _rpc(self, op: int, *args):
+        request = P.encode_request(op, *args)
+        if len(request) + 4 > self.max_frame_bytes:
+            raise ValueError(
+                f"request of {len(request)} bytes exceeds frame cap "
+                f"{self.max_frame_bytes}; split the batch"
+            )
+        last: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                with self._lock:
+                    self.rpc_stats.retries += 1
+            sock: Optional[socket.socket] = None
+            try:
+                sock = self._checkout()
+                P.send_frame(sock, request)
+                payload = P.recv_frame(sock, self.max_frame_bytes)
+                if payload is None:
+                    raise P.TruncatedFrame("node closed the connection mid-RPC")
+                result = P.decode_response(op, payload)
+                with self._lock:
+                    self.rpc_stats.rpcs += 1
+                    self.rpc_stats.bytes_sent += len(request) + 4
+                    self.rpc_stats.bytes_received += len(payload) + 4
+                self._checkin(sock)
+                return result
+            except P.RemoteError:
+                # the node is healthy and executed the op: not retryable
+                self._checkin(sock)
+                raise
+            except (OSError, P.ProtocolError) as e:
+                last = e
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+        with self._lock:
+            self.rpc_stats.failures += 1
+        raise NodeUnavailable(f"node {self.address} unreachable: {last}") from last
+
+    def ping(self) -> bool:
+        """One round trip; ``False`` if the node is unreachable."""
+        try:
+            self._rpc(P.OP_PING)
+            return True
+        except NodeUnavailable:
+            return False
+
+    # ------------------------------------------------------------- contract
+    def put_batch(
+        self,
+        tokens: Sequence[int],
+        blocks: Sequence[np.ndarray],
+        start_block: int = 0,
+        skip_existing: bool = True,
+    ) -> int:
+        return int(
+            self._rpc(P.OP_PUT, list(tokens), list(blocks), start_block, skip_existing)
+        )
+
+    def probe(self, tokens: Sequence[int]) -> int:
+        return int(self._rpc(P.OP_PROBE, list(tokens)))
+
+    def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
+        return self._rpc(P.OP_GET, list(tokens), int(n_tokens))
+
+    def probe_many(self, seqs: Sequence[Sequence[int]]) -> List[int]:
+        if not seqs:
+            return []
+        return [int(v) for v in self._rpc(P.OP_PROBE_MANY, [list(s) for s in seqs])]
+
+    def get_many(
+        self, items: Sequence[Tuple[Sequence[int], int]]
+    ) -> List[List[np.ndarray]]:
+        if not items:
+            return []
+        return self._rpc(P.OP_GET_MANY, [(list(t), int(n)) for t, n in items])
+
+    def put_many(
+        self, items: Sequence[Tuple[Sequence[int], Sequence[np.ndarray], int]]
+    ) -> List[int]:
+        if not items:
+            return []
+        # chunk by payload bytes so one giant batch can't trip the frame cap
+        out: List[int] = []
+        chunk: list = []
+        chunk_bytes = 0
+        for tokens, blocks, start in items:
+            nbytes = sum(np.asarray(b).nbytes for b in blocks)
+            if chunk and chunk_bytes + nbytes > self.put_chunk_bytes:
+                out.extend(int(v) for v in self._rpc(P.OP_PUT_MANY, chunk))
+                chunk, chunk_bytes = [], 0
+            chunk.append((list(tokens), list(blocks), int(start)))
+            chunk_bytes += nbytes
+        if chunk:
+            out.extend(int(v) for v in self._rpc(P.OP_PUT_MANY, chunk))
+        return out
+
+    def maintenance(self, compact_steps: int = 8) -> dict:
+        return self._rpc(P.OP_MAINTENANCE, int(compact_steps))
+
+    def flush(self) -> None:
+        self._rpc(P.OP_FLUSH)
+
+    def close(self) -> None:
+        """Close the client's connections (the node itself stays up — its
+        lifecycle belongs to whoever spawned it)."""
+        with self._lock:
+            self._closed = True
+            idle, self._idle = self._idle, []
+        for sock in idle:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ---------------------------------------------------------------- stats
+    def node_report(self) -> dict:
+        """Raw node-side report: store stats + server transport counters."""
+        return self._rpc(P.OP_STATS)
+
+    @property
+    def stats(self) -> StoreStats:
+        remote = self.node_report()["stats"]
+        out = StoreStats()
+        for k, v in remote.items():
+            if hasattr(out, k):
+                setattr(out, k, v)
+        return out
+
+    @property
+    def disk_bytes(self) -> int:
+        return int(self.node_report()["disk_bytes"])
+
+    @property
+    def file_count(self) -> int:
+        return int(self.node_report()["file_count"])

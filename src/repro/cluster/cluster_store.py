@@ -1,0 +1,439 @@
+"""``ClusterKVBlockStore`` — one ``StorageBackend`` over N remote cache
+nodes, routed by a consistent-hash ring.
+
+This is the cross-process analogue of ``ShardedKVBlockStore``: the same
+first-block routing hash places every extension of a prefix on the same
+node (probes and range scans stay node-local), but placement goes
+through a ``HashRing`` instead of ``hash % N`` so membership changes
+only remap the failed/joined node's arcs.
+
+Replication and failover:
+
+* ``replication = R`` writes every put to the first R *live* nodes of
+  the key's ring preference list.  When a node dies mid-write the put
+  slides to the next live node — the cluster degrades to serving with
+  R copies among the survivors rather than refusing writes.
+* Reads consult the first R live preference nodes and take the best
+  answer (probe: max prefix; get: longest block run), so a node that
+  missed writes while down — or came back with a cold store — can never
+  shorten the answer below what a surviving replica holds.  With R ≥ 2
+  a single node failure therefore loses **zero committed blocks**.
+* A node that fails an RPC (after the client's retries) is marked
+  *down*: routing filters it out everywhere until ``refresh_nodes``
+  (called from every ``maintenance`` cycle, or explicitly) pings it
+  back.  Rejoin is a pure membership flip — the ring never rehashes, so
+  the rejoined node resumes exactly its old arcs (LMCache-style cache
+  cluster semantics: nodes are cache, the engine recomputes true
+  misses, so rebalance never blocks serving).
+
+Fan-out reuses the grouped-parallel machinery of the sharded store: the
+multi-sequence ops group positions by replica set and run the groups
+concurrently on an ``IOExecutor``, each group riding the client's
+batched RPCs (one round trip per node per group).
+
+Because this class satisfies the ``StorageBackend`` protocol,
+``CacheHierarchy``, ``ServingEngine``, the write-behind ``CommitQueue``,
+and ``MaintenanceService`` work against a cluster unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.backend import merge_stats
+from ..core.store import StoreStats
+from ..runtime.executor import IOExecutor
+from .client import NodeUnavailable, RemoteKVBlockStore
+from .ring import HashRing, key_hash
+from .server import Address
+
+
+@dataclass
+class ClusterStats:
+    failovers: int = 0  # reads answered by a non-primary replica
+    degraded_reads: int = 0  # reads served while >=1 preferred node was down
+    marked_down: int = 0
+    revived: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class ClusterKVBlockStore:
+    """Consistent-hash routed, replicated client over N cache nodes."""
+
+    name = "cluster"
+
+    def __init__(
+        self,
+        nodes: Sequence[Union[RemoteKVBlockStore, Address]],
+        replication: int = 1,
+        block_size: Optional[int] = None,
+        vnodes: int = 64,
+        io_threads: int = 0,
+        io_executor: Optional[IOExecutor] = None,
+        node_ids: Optional[Sequence[str]] = None,
+        **client_kwargs,
+    ):
+        """``nodes`` are connected clients or addresses (clients are then
+        constructed here with ``client_kwargs``).  ``replication`` is
+        clamped to the cluster size; R >= 2 survives single-node loss with
+        zero lost committed blocks.
+
+        ``node_ids`` are the stable logical identities hashed onto the
+        ring (defaults to ``str(address)``).  Deployments should pass
+        durable names: ring placement then survives a node coming back
+        on a different port/host, and is reproducible across runs."""
+        if not nodes:
+            raise ValueError("cluster needs at least one node")
+        self.nodes: List[RemoteKVBlockStore] = []
+        for n in nodes:
+            if isinstance(n, RemoteKVBlockStore):
+                self.nodes.append(n)
+            else:
+                self.nodes.append(
+                    RemoteKVBlockStore(n, block_size=block_size, **client_kwargs)
+                )
+                block_size = block_size or self.nodes[-1].block_size
+        sizes = {c.block_size for c in self.nodes}
+        if len(sizes) != 1:
+            raise ValueError(f"nodes disagree on block_size: {sorted(sizes)}")
+        self.block_size = sizes.pop()
+        self.replication = max(1, min(replication, len(self.nodes)))
+        if node_ids is None:
+            node_ids = [str(c.address) for c in self.nodes]
+        if len(node_ids) != len(self.nodes) or len(set(node_ids)) != len(node_ids):
+            raise ValueError("node_ids must be unique, one per node")
+        self.ring = HashRing(list(node_ids), vnodes=vnodes)
+        self.cluster_stats = ClusterStats()
+        self._down: set = set()
+        self._lock = threading.Lock()
+        if io_executor is not None:
+            self._executor, self._owns_executor = io_executor, False
+        elif io_threads > 0:
+            # RPC workers block on sockets with the GIL released, so the
+            # pool may be wider than the core count (see IOExecutor)
+            self._executor = IOExecutor(max_workers=io_threads, cap_to_cpu=False)
+            self._owns_executor = True
+        else:
+            self._executor, self._owns_executor = None, False
+
+    # -------------------------------------------------------------- routing
+    def _live_pref(self, tokens: Sequence[int], read: bool = False) -> List[int]:
+        """Ring preference order with down nodes filtered out.  ``read``
+        marks the call as a read for the degraded-read counter (a read
+        whose *ideal* replica set had a down member is served, but with
+        less redundancy than configured)."""
+        pref = self.ring.preference(key_hash(tokens, self.block_size))
+        with self._lock:
+            down = set(self._down)
+        live = [i for i in pref if i not in down]
+        if not live:
+            raise NodeUnavailable("every replica for this key range is down")
+        if read and any(i in down for i in pref[: self.replication]):
+            with self._lock:
+                self.cluster_stats.degraded_reads += 1
+        return live
+
+    def replicas_for(self, tokens: Sequence[int]) -> List[int]:
+        """The node indices a put of ``tokens`` targets right now."""
+        return self._live_pref(tokens)[: self.replication]
+
+    def mark_down(self, idx: int) -> None:
+        with self._lock:
+            if idx not in self._down:
+                self._down.add(idx)
+                self.cluster_stats.marked_down += 1
+
+    @property
+    def down_nodes(self) -> List[int]:
+        with self._lock:
+            return sorted(self._down)
+
+    @property
+    def live_nodes(self) -> List[int]:
+        with self._lock:
+            return [i for i in range(len(self.nodes)) if i not in self._down]
+
+    def refresh_nodes(self) -> List[int]:
+        """Ping every down node; revive the ones that answer.  Returns the
+        revived indices.  Rejoin is a membership flip only — the ring is
+        static, so the node resumes its original arcs immediately."""
+        revived = []
+        with self._lock:
+            down = sorted(self._down)
+        for i in down:
+            if self.nodes[i].ping():
+                with self._lock:
+                    self._down.discard(i)
+                    self.cluster_stats.revived += 1
+                revived.append(i)
+        return revived
+
+    # ----------------------------------------------------- single-key ops
+    def put_batch(
+        self,
+        tokens: Sequence[int],
+        blocks: Sequence[np.ndarray],
+        start_block: int = 0,
+        skip_existing: bool = True,
+    ) -> int:
+        """Write to the first R live preference nodes; a mid-write failure
+        marks the node down and slides to the next live node, so the put
+        keeps R copies among survivors whenever possible."""
+        written: List[int] = []
+        for idx in self._live_pref(tokens):
+            if len(written) >= self.replication:
+                break
+            try:
+                written.append(
+                    self.nodes[idx].put_batch(
+                        tokens, blocks, start_block=start_block,
+                        skip_existing=skip_existing,
+                    )
+                )
+            except NodeUnavailable:
+                self.mark_down(idx)
+        if not written:
+            raise NodeUnavailable("no replica accepted the write")
+        return max(written)
+
+    def probe(self, tokens: Sequence[int]) -> int:
+        """Max contiguous prefix over the first R live replicas (a replica
+        that was down for some writes can only under-report; max restores
+        the survivors' view)."""
+        best = 0
+        full = (len(tokens) // self.block_size) * self.block_size
+        for rank, idx in enumerate(self._live_pref(tokens, read=True)[: self.replication]):
+            try:
+                got = self.nodes[idx].probe(tokens)
+            except NodeUnavailable:
+                self.mark_down(idx)
+                continue
+            if rank > 0 and got > best:
+                with self._lock:
+                    self.cluster_stats.failovers += 1
+            best = max(best, got)
+            if best >= full:
+                break
+        return best
+
+    def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
+        best: List[np.ndarray] = []
+        want_blocks = n_tokens // self.block_size
+        for rank, idx in enumerate(self._live_pref(tokens, read=True)[: self.replication]):
+            try:
+                got = self.nodes[idx].get_batch(tokens, n_tokens)
+            except NodeUnavailable:
+                self.mark_down(idx)
+                continue
+            if len(got) > len(best):
+                if rank > 0:
+                    with self._lock:
+                        self.cluster_stats.failovers += 1
+                best = got
+            if len(best) >= want_blocks:
+                break
+        return best
+
+    # ------------------------------------------------------------- fan-out
+    def _groups(
+        self, seqs: Sequence[Sequence[int]], read: bool = False
+    ) -> Dict[Tuple[int, ...], List[int]]:
+        """Positions grouped by their current replica tuple; one group =
+        one batched RPC per replica node."""
+        groups: Dict[Tuple[int, ...], List[int]] = {}
+        for pos, tokens in enumerate(seqs):
+            key = tuple(self._live_pref(tokens, read=read)[: self.replication])
+            groups.setdefault(key, []).append(pos)
+        return groups
+
+    def _run_groups(self, groups, task) -> None:
+        """Run ``task(replicas, positions)`` for every group, in parallel
+        on the executor when one is attached: one batched RPC per node
+        per group.  Keeping whole groups in single round trips beats
+        chunking them across pooled connections — per-RPC costs (frame
+        handling, executor handoff, syscalls) outweigh the intra-node
+        pipelining that smaller chunks would buy."""
+        items = list(groups.items())
+        if self._executor is not None and len(items) > 1:
+            self._executor.map_parallel(lambda kv: task(kv[0], kv[1]), items)
+            return
+        for replicas, positions in items:
+            task(replicas, positions)
+
+    def probe_many(self, seqs: Sequence[Sequence[int]]) -> List[int]:
+        out = [0] * len(seqs)
+
+        def task(replicas: Tuple[int, ...], positions: List[int]) -> None:
+            batch = [seqs[p] for p in positions]
+            answered = False
+            for rank, idx in enumerate(replicas):
+                try:
+                    res = self.nodes[idx].probe_many(batch)
+                except NodeUnavailable:
+                    self.mark_down(idx)
+                    continue
+                for p, got in zip(positions, res):
+                    if rank > 0 and got > out[p]:
+                        with self._lock:
+                            self.cluster_stats.failovers += 1
+                    out[p] = max(out[p], got)
+                answered = True
+            if not answered:  # whole replica tuple went down: re-route
+                for p in positions:
+                    out[p] = self.probe(seqs[p])
+
+        self._run_groups(self._groups(seqs, read=True), task)
+        return out
+
+    def get_many(
+        self, items: Sequence[Tuple[Sequence[int], int]]
+    ) -> List[List[np.ndarray]]:
+        out: List[List[np.ndarray]] = [[] for _ in items]
+
+        def task(replicas: Tuple[int, ...], positions: List[int]) -> None:
+            pending = list(positions)
+            for rank, idx in enumerate(replicas):
+                if not pending:
+                    return
+                batch = [(items[p][0], items[p][1]) for p in pending]
+                try:
+                    res = self.nodes[idx].get_many(batch)
+                except NodeUnavailable:
+                    self.mark_down(idx)
+                    continue
+                still = []
+                for p, got in zip(pending, res):
+                    if len(got) > len(out[p]):
+                        if rank > 0:
+                            with self._lock:
+                                self.cluster_stats.failovers += 1
+                        out[p] = got
+                    if len(out[p]) < items[p][1] // self.block_size:
+                        still.append(p)  # deficient: ask the next replica
+                pending = still
+            for p in pending:  # replica tuple exhausted: re-route fully
+                got = self.get_batch(items[p][0], items[p][1])
+                if len(got) > len(out[p]):
+                    out[p] = got
+
+        self._run_groups(self._groups([t for t, _ in items], read=True), task)
+        return out
+
+    def put_many(
+        self, items: Sequence[Tuple[Sequence[int], Sequence[np.ndarray], int]]
+    ) -> List[int]:
+        out = [0] * len(items)
+
+        def task(replicas: Tuple[int, ...], positions: List[int]) -> None:
+            batch = [items[p] for p in positions]
+            successes = 0
+            for idx in replicas:
+                try:
+                    res = self.nodes[idx].put_many(batch)
+                except NodeUnavailable:
+                    self.mark_down(idx)
+                    continue
+                for p, wrote in zip(positions, res):
+                    out[p] = max(out[p], wrote)
+                successes += 1
+            if successes < self.replication and len(self.live_nodes) > successes:
+                # a replica died mid-batch: slide to the next live
+                # preference nodes (put_batch recomputes them; surviving
+                # copies dedup via skip_existing) so the batch keeps R
+                # copies among survivors — same contract as put_batch
+                for p in positions:
+                    t, bs, s = items[p]
+                    out[p] = max(out[p], self.put_batch(t, bs, start_block=s))
+
+        self._run_groups(self._groups([t for t, _, _ in items]), task)
+        return out
+
+    # ---------------------------------------------------------- maintenance
+    def maintenance(self, compact_steps: int = 8) -> dict:
+        """Fan one maintenance cycle out to every live node (parallel when
+        an executor is attached) and piggyback down-node rejoin checks —
+        the cadence the serving engine already drives."""
+        revived = self.refresh_nodes()
+        live = self.live_nodes
+        rep: dict = {"compactions": 0, "nodes": {}, "revived": revived,
+                     "down": self.down_nodes}
+
+        def one(i: int) -> Optional[dict]:
+            try:
+                return self.nodes[i].maintenance(compact_steps)
+            except NodeUnavailable:
+                self.mark_down(i)
+                return None
+
+        if self._executor is not None and len(live) > 1:
+            reports = self._executor.map_parallel(one, live)
+        else:
+            reports = [one(i) for i in live]
+        for i, nrep in zip(live, reports):
+            if nrep is None:
+                continue
+            rep["nodes"][i] = nrep
+            rep["compactions"] += nrep.get("compactions", 0)
+        return rep
+
+    # ------------------------------------------------------------ lifecycle
+    def flush(self) -> None:
+        for i in self.live_nodes:
+            try:
+                self.nodes[i].flush()
+            except NodeUnavailable:
+                self.mark_down(i)
+
+    def close(self) -> None:
+        """Close the client connections; node processes are owned by their
+        spawner and stay up."""
+        if self._owns_executor and self._executor is not None:
+            self._executor.close()
+        for c in self.nodes:
+            c.close()
+
+    # ---------------------------------------------------------------- stats
+    def _sum_live(self, attr: str) -> int:
+        total = 0
+        for i in self.live_nodes:
+            try:
+                total += getattr(self.nodes[i], attr)
+            except NodeUnavailable:
+                self.mark_down(i)
+        return total
+
+    @property
+    def stats(self) -> StoreStats:
+        parts = []
+        for i in self.live_nodes:
+            try:
+                parts.append(self.nodes[i].stats)
+            except NodeUnavailable:
+                self.mark_down(i)
+        return merge_stats(parts)
+
+    @property
+    def disk_bytes(self) -> int:
+        return self._sum_live("disk_bytes")
+
+    @property
+    def file_count(self) -> int:
+        return self._sum_live("file_count")
+
+    def report(self) -> dict:
+        """Cluster-level telemetry: membership, failover counters, and the
+        per-client transport stats."""
+        return {
+            "n_nodes": len(self.nodes),
+            "replication": self.replication,
+            "live": self.live_nodes,
+            "down": self.down_nodes,
+            "cluster": self.cluster_stats.as_dict(),
+            "rpc": {i: c.rpc_stats.as_dict() for i, c in enumerate(self.nodes)},
+        }

@@ -1,0 +1,178 @@
+"""Cache-node process: ``python -m repro.cluster.node --root DIR ...``
+
+Runs one ``CacheNodeServer`` over a local backend until killed — the
+deployable unit of the cache cluster.  Imports stay storage-only (no
+jax), so a node starts in milliseconds and runs on cacheless CPU hosts.
+
+``spawn_local_node`` / ``NodeProcess`` are the in-repo process manager:
+examples, benchmarks, and tests use them to stand up real multi-process
+clusters on localhost (the node prints ``READY port=N`` once the socket
+is bound; the parent blocks on that line).  Production deployments run
+the same module under their own supervisor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import select
+import signal
+import subprocess
+import sys
+import threading
+import time
+from typing import List, Optional
+
+from ..core.baselines import MemoryOnlyStore
+from ..core.codec import CODEC_INT8, CODEC_RAW, BatchCodec
+from ..core.sharded_store import ShardedKVBlockStore
+from ..core.store import KVBlockStore
+from .server import CacheNodeServer
+
+
+def make_backend(args) -> object:
+    codec = {
+        "raw": BatchCodec(CODEC_RAW, use_zlib=False),
+        "int8": BatchCodec(CODEC_INT8, use_zlib=False),
+        "int8-zlib": BatchCodec(CODEC_INT8, use_zlib=True),
+    }[args.codec]
+    budget = args.budget_bytes if args.budget_bytes > 0 else None
+    if args.backend == "memory":
+        return MemoryOnlyStore(budget or 1 << 30, block_size=args.block_size)
+    extra = {}
+    if args.vlog_file_bytes > 0:
+        extra["vlog_file_bytes"] = args.vlog_file_bytes
+    if args.backend == "sharded":
+        return ShardedKVBlockStore(
+            args.root, n_shards=args.shards, block_size=args.block_size,
+            codec=codec, budget_bytes=budget, io_threads=args.store_io_threads,
+            **extra,
+        )
+    return KVBlockStore(args.root, block_size=args.block_size, codec=codec,
+                        budget_bytes=budget, **extra)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="one KV-cache cluster node")
+    ap.add_argument("--root", required=True, help="backend data directory")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0, help="0 = ephemeral")
+    ap.add_argument("--unix-path", default=None, help="serve AF_UNIX instead of TCP")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--backend", choices=("lsm", "sharded", "memory"), default="lsm")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--codec", choices=("raw", "int8", "int8-zlib"), default="int8-zlib")
+    ap.add_argument("--budget-bytes", type=int, default=0, help="0 = unbounded")
+    ap.add_argument("--vlog-file-bytes", type=int, default=0,
+                    help="tensor-log roll size; 0 = backend default (bounds "
+                         "FIFO-eviction granularity for budgeted nodes)")
+    ap.add_argument("--io-threads", type=int, default=2,
+                    help="server-side request concurrency (the node's serving width)")
+    ap.add_argument("--store-io-threads", type=int, default=0,
+                    help="sharded backend's internal fan-out threads")
+    args = ap.parse_args(argv)
+
+    backend = make_backend(args)
+    server = CacheNodeServer(
+        backend, host=args.host, port=args.port, unix_path=args.unix_path,
+        io_threads=args.io_threads,
+    ).start()
+    if isinstance(server.address, str):
+        print(f"READY unix={server.address}", flush=True)
+    else:
+        print(f"READY port={server.address[1]}", flush=True)
+
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+    stop.wait()
+    server.close()
+    backend.flush()
+    backend.close()
+    return 0
+
+
+# ------------------------------------------------------------ spawn helpers
+class NodeProcess:
+    """Handle on one spawned local node: address + process control."""
+
+    def __init__(self, proc: subprocess.Popen, address, root: str):
+        self.proc = proc
+        self.address = address
+        self.root = root
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def kill(self) -> None:
+        """Hard kill (SIGKILL) — the failure the failover demo injects."""
+        if self.alive:
+            self.proc.kill()
+            self.proc.wait(timeout=10)
+
+    def terminate(self) -> None:
+        if self.alive:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.kill()
+
+    def close(self) -> None:
+        self.terminate()
+        if self.proc.stdout is not None:
+            self.proc.stdout.close()
+
+
+def spawn_local_node(
+    root: str,
+    port: int = 0,
+    host: str = "127.0.0.1",
+    block_size: int = 16,
+    backend: str = "lsm",
+    codec: str = "int8-zlib",
+    io_threads: int = 2,
+    budget_bytes: int = 0,
+    vlog_file_bytes: int = 0,
+    ready_timeout_s: float = 30.0,
+    extra_args: Optional[List[str]] = None,
+) -> NodeProcess:
+    """Start ``python -m repro.cluster.node`` as a child process and block
+    until its socket is bound (the ``READY`` line)."""
+    src_dir = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, "-m", "repro.cluster.node",
+        "--root", root, "--host", host, "--port", str(port),
+        "--block-size", str(block_size), "--backend", backend,
+        "--codec", codec, "--io-threads", str(io_threads),
+        "--budget-bytes", str(budget_bytes),
+        "--vlog-file-bytes", str(vlog_file_bytes),
+    ] + (extra_args or [])
+    proc = subprocess.Popen(
+        cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+    deadline = time.time() + ready_timeout_s
+    line = ""
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            out = proc.stdout.read() if proc.stdout else ""
+            raise RuntimeError(f"node exited at startup (rc={proc.returncode}): {out}")
+        ready, _, _ = select.select([proc.stdout], [], [], 0.25)
+        if ready:
+            line = proc.stdout.readline()
+            if line.startswith("READY"):
+                break
+    else:
+        proc.kill()
+        raise TimeoutError(f"node gave no READY within {ready_timeout_s}s: {line!r}")
+    token = line.split("READY", 1)[1].strip()
+    key, _, value = token.partition("=")
+    address = value if key == "unix" else (host, int(value))
+    return NodeProcess(proc, address, root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

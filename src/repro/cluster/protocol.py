@@ -1,0 +1,406 @@
+"""Wire protocol of the cache cluster: length-prefixed binary frames.
+
+Every RPC is one request frame and one response frame over a stream
+socket (TCP or ``AF_UNIX``):
+
+    frame    :=  u32 payload_len (big-endian) | payload
+    request  :=  u8 opcode | body
+    response :=  u8 status  | body          status 0 = ok, 1 = error
+
+Bodies are flat ``struct``-packed binary — token sequences ride as the
+same big-endian ``u32`` words the key codec uses on disk, tensor blocks
+as ``dtype | shape | raw C-order bytes``, and the observability ops
+(``STATS`` / ``MAINTENANCE``) as JSON, since their payloads are small
+dicts.
+
+Block lists are *packed* when homogeneous (the overwhelmingly common
+case: every KV block of a sequence has the same dtype and shape): one
+header plus a single contiguous raw region, so the receiver decodes a
+whole batch with one ``frombuffer`` — a bulk, GIL-releasing operation —
+instead of per-block Python work.  Decoded blocks are zero-copy views
+into the receive buffer; per-response that buffer stays alive exactly as
+long as its blocks do.  Heterogeneous lists fall back to a per-block
+layout (layout byte 0).  This matters for scalability: the client is one
+GIL domain fanning out to N nodes, and per-block decode bursts would
+starve the very socket reads that keep those nodes busy.
+
+Robustness contract (property-tested in ``tests/test_cluster.py``):
+
+* ``encode``/``decode`` round-trip every op exactly;
+* a frame longer than ``max_frame_bytes`` is rejected *before* the body
+  is allocated (``FrameTooLarge``) — a malicious or corrupt length word
+  cannot OOM a node;
+* a connection that dies mid-frame raises ``TruncatedFrame`` — callers
+  see a clean, retryable error, never a hang or a partial decode (socket
+  timeouts bound the wait; ``recv_frame`` never spins on a dead peer);
+* an orderly peer close *between* frames returns ``None`` (EOF), which
+  is the normal end of a connection, not an error.
+
+Every decoder bounds-checks against the actual payload length, so a
+truncated or corrupted body surfaces as ``ProtocolError`` rather than an
+out-of-range read.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Default cap on one frame.  A frame carries at most one batch of KV
+# blocks; 256 MiB is ~64k blocks of 4 KiB — far beyond any batch the
+# serving layer issues, and small enough that a corrupt length word is
+# caught immediately.
+MAX_FRAME_BYTES = 256 * 1024 * 1024
+
+_U32 = struct.Struct(">I")
+_U64 = struct.Struct(">Q")
+
+# ------------------------------------------------------------------ opcodes
+OP_PING = 1
+OP_PROBE = 2
+OP_PROBE_MANY = 3
+OP_GET = 4
+OP_GET_MANY = 5
+OP_PUT = 6
+OP_PUT_MANY = 7
+OP_STATS = 8
+OP_MAINTENANCE = 9
+OP_FLUSH = 10
+
+OP_NAMES = {
+    OP_PING: "ping",
+    OP_PROBE: "probe",
+    OP_PROBE_MANY: "probe_many",
+    OP_GET: "get_batch",
+    OP_GET_MANY: "get_many",
+    OP_PUT: "put_batch",
+    OP_PUT_MANY: "put_many",
+    OP_STATS: "stats",
+    OP_MAINTENANCE: "maintenance",
+    OP_FLUSH: "flush",
+}
+
+STATUS_OK = 0
+STATUS_ERROR = 1
+
+
+class ProtocolError(Exception):
+    """Malformed frame or body — the connection is no longer trustworthy."""
+
+
+class FrameTooLarge(ProtocolError):
+    """Frame length exceeds the negotiated cap (rejected before allocation)."""
+
+
+class TruncatedFrame(ProtocolError):
+    """Peer died mid-frame (distinct from a clean between-frames EOF)."""
+
+
+class RemoteError(Exception):
+    """The node executed the request and reported a failure."""
+
+
+# ----------------------------------------------------------------- framing
+def send_frame(sock: socket.socket, payload: bytes) -> None:
+    if len(payload) >= 1 << 16:
+        # two sends spare a multi-MiB concat copy; small frames stay one
+        sock.sendall(_U32.pack(len(payload)))
+        sock.sendall(payload)
+    else:
+        sock.sendall(_U32.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytearray]:
+    """Read exactly ``n`` bytes into one preallocated buffer (no
+    reassembly copy); ``None`` on immediate EOF, raises
+    ``TruncatedFrame`` on EOF after a partial read."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], min(n - got, 1 << 20))
+        if r == 0:
+            if got == 0:
+                return None
+            raise TruncatedFrame(f"peer closed after {got}/{n} bytes")
+        got += r
+    return buf
+
+
+def recv_frame(
+    sock: socket.socket, max_frame_bytes: int = MAX_FRAME_BYTES
+) -> Optional[bytes]:
+    """Read one frame; ``None`` on clean EOF between frames."""
+    header = _recv_exact(sock, 4)
+    if header is None:
+        return None
+    (length,) = _U32.unpack(header)
+    if length > max_frame_bytes:
+        raise FrameTooLarge(f"frame of {length} bytes exceeds cap {max_frame_bytes}")
+    if length == 0:
+        return b""
+    body = _recv_exact(sock, length)
+    if body is None:
+        raise TruncatedFrame("peer closed between frame header and body")
+    return body
+
+
+# ------------------------------------------------------------- primitives
+class _Reader:
+    """Bounds-checked cursor over a payload.  ``take`` returns zero-copy
+    ``memoryview`` slices, so decoding a tensor batch never duplicates
+    the receive buffer."""
+
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf):
+        self.buf = memoryview(buf)
+        self.pos = 0
+
+    def take(self, n: int) -> memoryview:
+        if self.pos + n > len(self.buf):
+            raise ProtocolError(
+                f"body truncated: wanted {n} bytes at offset {self.pos}, "
+                f"payload is {len(self.buf)}"
+            )
+        out = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def u64(self) -> int:
+        return _U64.unpack(self.take(8))[0]
+
+    def done(self) -> None:
+        if self.pos != len(self.buf):
+            raise ProtocolError(f"{len(self.buf) - self.pos} trailing bytes after body")
+
+
+def _enc_tokens(tokens: Sequence[int]) -> bytes:
+    arr = np.asarray(tokens, dtype=">u4")
+    if arr.ndim != 1:
+        raise ProtocolError("token sequence must be one-dimensional")
+    return _U32.pack(arr.size) + arr.tobytes()
+
+
+def _dec_tokens(r: _Reader) -> List[int]:
+    n = r.u32()
+    return np.frombuffer(r.take(4 * n), dtype=">u4").astype(np.int64).tolist()
+
+
+def _dtype_head(arr: np.ndarray) -> bytes:
+    dt = arr.dtype.str.encode("ascii")  # e.g. b'<f2', endian-explicit
+    head = struct.pack(">BB", len(dt), arr.ndim) + dt
+    return head + b"".join(_U32.pack(d) for d in arr.shape)
+
+
+def _dec_dtype_head(r: _Reader) -> Tuple[np.dtype, tuple]:
+    dt_len, ndim = struct.unpack(">BB", r.take(2))
+    try:
+        dtype = np.dtype(bytes(r.take(dt_len)).decode("ascii"))
+    except (TypeError, UnicodeDecodeError) as e:
+        raise ProtocolError(f"bad block dtype: {e}") from e
+    return dtype, tuple(r.u32() for _ in range(ndim))
+
+
+def _block_nbytes(dtype: np.dtype, shape: tuple) -> int:
+    return dtype.itemsize * int(np.prod(shape, dtype=np.int64)) if shape else dtype.itemsize
+
+
+def _enc_block(block: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(block)
+    return _dtype_head(arr) + _U64.pack(arr.nbytes) + arr.tobytes()
+
+
+def _dec_block(r: _Reader) -> np.ndarray:
+    dtype, shape = _dec_dtype_head(r)
+    nbytes = r.u64()
+    expect = _block_nbytes(dtype, shape)
+    if nbytes != expect:
+        raise ProtocolError(f"block byte count {nbytes} != dtype/shape product {expect}")
+    raw = r.take(nbytes)
+    return np.frombuffer(raw, dtype=dtype).reshape(shape)
+
+
+def _enc_blocks(blocks: Sequence[np.ndarray]) -> List:
+    """Encode a block list as parts for one final join.  Homogeneous
+    lists (layout 1, the common case) pack every block into a single
+    contiguous raw region; mixed lists (layout 0) ride per-block."""
+    arrs = [np.ascontiguousarray(b) for b in blocks]
+    if arrs and all(
+        a.dtype == arrs[0].dtype and a.shape == arrs[0].shape for a in arrs[1:]
+    ):
+        packed = np.stack(arrs) if len(arrs) > 1 else arrs[0][None]
+        return [
+            _U32.pack(len(arrs)), b"\x01", _dtype_head(arrs[0]),
+            _U64.pack(packed.nbytes), packed.data,
+        ]
+    return [_U32.pack(len(arrs)), b"\x00"] + [_enc_block(a) for a in arrs]
+
+
+def _dec_blocks(r: _Reader) -> List[np.ndarray]:
+    n = r.u32()
+    layout = r.u8()
+    if layout == 0:
+        return [_dec_block(r) for _ in range(n)]
+    if layout != 1:
+        raise ProtocolError(f"unknown block layout {layout}")
+    dtype, shape = _dec_dtype_head(r)
+    nbytes = r.u64()
+    if nbytes != n * _block_nbytes(dtype, shape):
+        raise ProtocolError(
+            f"packed byte count {nbytes} != {n} x dtype/shape product"
+        )
+    raw = r.take(nbytes)
+    arr = np.frombuffer(raw, dtype=dtype).reshape((n,) + shape)
+    return list(arr)  # n zero-copy views over the receive buffer
+
+
+# ------------------------------------------------------------- requests
+def encode_request(op: int, *args) -> bytes:
+    """Serialize one request.  Argument shapes per op:
+
+    PING ()                           PROBE (tokens,)
+    PROBE_MANY (seqs,)                GET (tokens, n_tokens)
+    GET_MANY (items,)                 items = [(tokens, n_tokens), ...]
+    PUT (tokens, blocks, start_block, skip_existing)
+    PUT_MANY (items,)                 items = [(tokens, blocks, start), ...]
+    STATS () / MAINTENANCE (compact_steps,) / FLUSH ()
+    """
+    parts: List = [struct.pack(">B", op)]
+    if op in (OP_PING, OP_STATS, OP_FLUSH):
+        pass
+    elif op == OP_PROBE:
+        parts.append(_enc_tokens(args[0]))
+    elif op == OP_PROBE_MANY:
+        parts.append(_U32.pack(len(args[0])))
+        parts.extend(_enc_tokens(t) for t in args[0])
+    elif op == OP_GET:
+        parts.append(_enc_tokens(args[0]) + _U64.pack(args[1]))
+    elif op == OP_GET_MANY:
+        parts.append(_U32.pack(len(args[0])))
+        parts.extend(_enc_tokens(t) + _U64.pack(n) for t, n in args[0])
+    elif op == OP_PUT:
+        tokens, blocks, start_block, skip_existing = args
+        parts.append(
+            _enc_tokens(tokens)
+            + _U32.pack(start_block)
+            + struct.pack(">B", 1 if skip_existing else 0)
+        )
+        parts.extend(_enc_blocks(blocks))
+    elif op == OP_PUT_MANY:
+        parts.append(_U32.pack(len(args[0])))
+        for t, bs, s in args[0]:
+            parts.append(_enc_tokens(t) + _U32.pack(s))
+            parts.extend(_enc_blocks(bs))
+    elif op == OP_MAINTENANCE:
+        parts.append(_U32.pack(args[0]))
+    else:
+        raise ProtocolError(f"unknown opcode {op}")
+    return b"".join(parts)
+
+
+def decode_request(payload: bytes) -> Tuple[int, tuple]:
+    """Inverse of :func:`encode_request`: ``(op, args)``."""
+    if not payload:
+        raise ProtocolError("empty request payload")
+    r = _Reader(payload)
+    op = r.u8()
+    if op in (OP_PING, OP_STATS, OP_FLUSH):
+        args: tuple = ()
+    elif op == OP_PROBE:
+        args = (_dec_tokens(r),)
+    elif op == OP_PROBE_MANY:
+        args = ([_dec_tokens(r) for _ in range(r.u32())],)
+    elif op == OP_GET:
+        args = (_dec_tokens(r), r.u64())
+    elif op == OP_GET_MANY:
+        args = ([(_dec_tokens(r), r.u64()) for _ in range(r.u32())],)
+    elif op == OP_PUT:
+        tokens = _dec_tokens(r)
+        start_block = r.u32()
+        skip_existing = bool(r.u8())
+        args = (tokens, _dec_blocks(r), start_block, skip_existing)
+    elif op == OP_PUT_MANY:
+        n = r.u32()
+        items = []
+        for _ in range(n):
+            tokens = _dec_tokens(r)
+            start = r.u32()
+            items.append((tokens, _dec_blocks(r), start))
+        args = (items,)
+    elif op == OP_MAINTENANCE:
+        args = (r.u32(),)
+    else:
+        raise ProtocolError(f"unknown opcode {op}")
+    r.done()
+    return op, args
+
+
+# ------------------------------------------------------------- responses
+def encode_ok(op: int, result) -> bytes:
+    """Serialize a success response for ``op``."""
+    parts: List = [struct.pack(">B", STATUS_OK)]
+    if op in (OP_PING, OP_FLUSH):
+        pass
+    elif op in (OP_PROBE, OP_PUT):
+        parts.append(_U64.pack(int(result)))
+    elif op in (OP_PROBE_MANY, OP_PUT_MANY):
+        parts.append(_U32.pack(len(result)))
+        parts.extend(_U64.pack(int(v)) for v in result)
+    elif op == OP_GET:
+        parts.extend(_enc_blocks(result))
+    elif op == OP_GET_MANY:
+        parts.append(_U32.pack(len(result)))
+        for bs in result:
+            parts.extend(_enc_blocks(bs))
+    elif op in (OP_STATS, OP_MAINTENANCE):
+        parts.append(json.dumps(result).encode("utf-8"))
+    else:
+        raise ProtocolError(f"unknown opcode {op}")
+    return b"".join(parts)
+
+
+def encode_error(message: str) -> bytes:
+    return struct.pack(">B", STATUS_ERROR) + message.encode("utf-8", "replace")
+
+
+def decode_response(op: int, payload: bytes):
+    """Decode a response to a request of type ``op``; raises
+    ``RemoteError`` if the node reported a failure."""
+    if not payload:
+        raise ProtocolError("empty response payload")
+    r = _Reader(payload)
+    status = r.u8()
+    if status == STATUS_ERROR:
+        raise RemoteError(bytes(r.buf[r.pos :]).decode("utf-8", "replace"))
+    if status != STATUS_OK:
+        raise ProtocolError(f"unknown response status {status}")
+    if op in (OP_PING, OP_FLUSH):
+        result = None
+    elif op in (OP_PROBE, OP_PUT):
+        result = r.u64()
+    elif op in (OP_PROBE_MANY, OP_PUT_MANY):
+        result = [r.u64() for _ in range(r.u32())]
+    elif op == OP_GET:
+        result = _dec_blocks(r)
+    elif op == OP_GET_MANY:
+        result = [_dec_blocks(r) for _ in range(r.u32())]
+    elif op in (OP_STATS, OP_MAINTENANCE):
+        try:
+            return json.loads(bytes(r.buf[r.pos :]).decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ProtocolError(f"bad JSON response body: {e}") from e
+    else:
+        raise ProtocolError(f"unknown opcode {op}")
+    r.done()
+    return result

@@ -1,0 +1,85 @@
+"""Consistent-hash ring for cache-node placement.
+
+Each node owns ``vnodes`` pseudo-random points on a 64-bit ring; a key
+hashes to a point and its *preference list* is the distinct nodes met
+walking clockwise from there.  Replica sets are prefixes of the
+preference list, which gives the two properties the cluster layer needs:
+
+* **Minimal movement** — adding or removing one node only remaps the
+  ring arcs that node's points owned (~1/N of the keyspace), so a node
+  rejoin is a local rebalance, not a full reshuffle (contrast modulo
+  hashing, where N → N±1 remaps almost every key).
+* **Stable failover order** — the preference list with node *k* filtered
+  out is exactly the preference list of the ring without *k*: readers
+  that skip a dead node land on the same replica that writes re-routed
+  to, with no coordination.
+
+Keys are the same first-block routing hash ``ShardedKVBlockStore`` uses
+(``key_hash``), so a whole prefix tree lands on one node and probes stay
+node-local — the cross-process analogue of in-process sharding.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import List, Sequence
+
+from ..core.keycodec import encode_tokens
+
+
+def key_hash(tokens: Sequence[int], block_size: int) -> int:
+    """64-bit ring position of a token sequence: hash of the first block
+    (stable across processes — blake2b, never ``hash()``)."""
+    head = encode_tokens(tokens[: min(block_size, len(tokens))])
+    return int.from_bytes(hashlib.blake2b(head, digest_size=8).digest(), "little")
+
+
+def _point(node_id: str, vnode: int) -> int:
+    h = hashlib.blake2b(f"{node_id}#{vnode}".encode(), digest_size=8).digest()
+    return int.from_bytes(h, "little")
+
+
+class HashRing:
+    """Static ring over ``node_ids`` (index-addressed); membership changes
+    are the *caller's* concern (the cluster store keeps a down-set and
+    filters, so the ring itself never rehashes at runtime)."""
+
+    def __init__(self, node_ids: Sequence[str], vnodes: int = 64):
+        if not node_ids:
+            raise ValueError("ring needs at least one node")
+        if len(set(node_ids)) != len(node_ids):
+            raise ValueError(f"duplicate node ids: {list(node_ids)}")
+        self.node_ids = list(node_ids)
+        self.vnodes = vnodes
+        pts = [
+            (_point(nid, v), idx)
+            for idx, nid in enumerate(self.node_ids)
+            for v in range(vnodes)
+        ]
+        pts.sort()
+        self._points = [p for p, _ in pts]
+        self._owners = [i for _, i in pts]
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
+
+    def preference(self, khash: int) -> List[int]:
+        """All node indices in clockwise order from ``khash`` (each node
+        once, first occurrence wins).  ``preference(k)[:r]`` is the
+        r-replica set; survivors keep their relative order when a node is
+        filtered out."""
+        start = bisect.bisect_left(self._points, khash) % len(self._points)
+        seen: List[int] = []
+        mask = set()
+        for i in range(len(self._points)):
+            owner = self._owners[(start + i) % len(self._points)]
+            if owner not in mask:
+                mask.add(owner)
+                seen.append(owner)
+                if len(seen) == len(self.node_ids):
+                    break
+        return seen
+
+    def primary(self, khash: int) -> int:
+        return self.preference(khash)[0]

@@ -1,0 +1,329 @@
+"""``CacheNodeServer`` — one cache node: a socket front-end over any
+thread-safe ``StorageBackend``.
+
+The server is a thin RPC shim, deliberately: every byte of storage logic
+stays in the backend (which already carries the ``core/backend.py``
+thread-safety contract), so a node is "an existing store, served".
+
+Architecture (one node):
+
+    acceptor/selector thread          IOExecutor (N workers)
+    ─────────────────────────────────────────────────────────
+    accept, read socket bytes,   ──►  decode request
+    reassemble frames                 run the backend op
+    (non-blocking, all conns)         send the response frame
+                                 ◄──  re-arm the connection
+
+A connection is *unregistered* from the selector while its request is
+being served and re-armed afterwards, so one connection has at most one
+request in flight (matching the synchronous client) and response writes
+never interleave.  Requests from *different* connections run
+concurrently on the executor — the same bounded pool discipline as the
+in-process runtime layer: when all workers are busy the selector thread
+blocks on admission, which backpressures every client instead of
+queueing unboundedly.
+
+Transports: TCP (``host``/``port``) or ``AF_UNIX`` (``unix_path``) — the
+frame protocol is transport-agnostic.
+"""
+
+from __future__ import annotations
+
+import os
+import selectors
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+from ..core.store import StoreStats
+from ..runtime.executor import IOExecutor
+from . import protocol as P
+
+Address = Union[Tuple[str, int], str]  # (host, port) or unix socket path
+
+
+@dataclass
+class ServerStats:
+    connections_accepted: int = 0
+    connections_open: int = 0
+    requests: int = 0
+    errors: int = 0  # backend/op failures reported to the client
+    protocol_errors: int = 0  # malformed frames (connection dropped)
+    bytes_in: int = 0
+    bytes_out: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class _Conn:
+    __slots__ = ("sock", "buf", "alive")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.buf = bytearray()
+        self.alive = True
+
+
+class CacheNodeServer:
+    def __init__(
+        self,
+        backend,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        unix_path: Optional[str] = None,
+        io_threads: int = 2,
+        io_executor: Optional[IOExecutor] = None,
+        max_frame_bytes: int = P.MAX_FRAME_BYTES,
+        send_timeout_s: float = 30.0,
+    ):
+        """``send_timeout_s`` bounds response writes: a client that stops
+        reading (stalled, hostile) gets dropped instead of wedging an
+        executor worker forever — with a small pool, unbounded sends
+        would eventually wedge every worker and stop the whole node."""
+        self.backend = backend
+        self.max_frame_bytes = max_frame_bytes
+        self.send_timeout_s = send_timeout_s
+        self.stats = ServerStats()
+        self._stats_lock = threading.Lock()
+        if io_executor is not None:
+            self._executor, self._owns_executor = io_executor, False
+        else:
+            # handlers are short (one request), so pending-job admission can
+            # be generous: stalls mean every worker is mid-request already
+            self._executor = IOExecutor(max_workers=max(1, io_threads), max_pending=64)
+            self._owns_executor = True
+        if unix_path is not None:
+            self._listener = socket.socket(socket.AF_UNIX)
+            if os.path.exists(unix_path):
+                os.unlink(unix_path)
+            self._listener.bind(unix_path)
+            self.address: Address = unix_path
+        else:
+            self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._listener.bind((host, port))
+            self.address = self._listener.getsockname()
+        self._listener.listen(128)
+        self._listener.setblocking(False)
+        self._selector = selectors.DefaultSelector()
+        self._selector.register(self._listener, selectors.EVENT_READ, "accept")
+        # self-pipe so executor workers can wake the selector to re-arm conns
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._selector.register(self._wake_r, selectors.EVENT_READ, "wake")
+        self._rearm: list = []
+        self._rearm_lock = threading.Lock()
+        self._conns: set = set()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, name="cache-node", daemon=True)
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "CacheNodeServer":
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        self._stop.set()
+        self._wake()
+        self._thread.join(timeout=10)
+        for conn in list(self._conns):
+            self._drop(conn, unregister=False)
+        try:
+            self._selector.close()
+        except OSError:
+            pass
+        self._listener.close()
+        self._wake_r.close()
+        self._wake_w.close()
+        if isinstance(self.address, str) and os.path.exists(self.address):
+            os.unlink(self.address)
+        if self._owns_executor:
+            self._executor.close()
+
+    def __enter__(self) -> "CacheNodeServer":
+        return self.start() if not self._thread.is_alive() else self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ selector
+    def _wake(self) -> None:
+        try:
+            self._wake_w.send(b"x")
+        except OSError:
+            pass
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            events = self._selector.select(timeout=0.5)
+            with self._rearm_lock:
+                rearm, self._rearm = self._rearm, []
+            for conn in rearm:
+                if conn.alive:
+                    self._pump(conn)
+            for key, _ in events:
+                if key.data == "accept":
+                    self._accept()
+                elif key.data == "wake":
+                    try:
+                        self._wake_r.recv(4096)
+                    except OSError:
+                        pass
+                else:
+                    self._read(key.data)
+
+    def _accept(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except (BlockingIOError, OSError):
+                return
+            sock.setblocking(False)
+            conn = _Conn(sock)
+            self._conns.add(conn)
+            with self._stats_lock:
+                self.stats.connections_accepted += 1
+                self.stats.connections_open += 1
+            self._selector.register(sock, selectors.EVENT_READ, conn)
+
+    def _read(self, conn: _Conn) -> None:
+        try:
+            chunk = conn.sock.recv(1 << 20)
+        except BlockingIOError:
+            return
+        except OSError:
+            self._drop(conn)
+            return
+        if not chunk:
+            self._drop(conn)
+            return
+        conn.buf += chunk
+        with self._stats_lock:
+            self.stats.bytes_in += len(chunk)
+        self._pump(conn, registered=True)
+
+    def _pump(self, conn: _Conn, registered: bool = False) -> None:
+        """If a full frame is buffered, hand it to the executor (the conn
+        leaves the selector until the response is sent); otherwise (re-)arm
+        the connection for reading."""
+        if len(conn.buf) >= 4:
+            length = int.from_bytes(conn.buf[:4], "big")
+            if length > self.max_frame_bytes:
+                # reject before allocating/reading the body: a corrupt
+                # length word must not OOM the node or desync the stream
+                with self._stats_lock:
+                    self.stats.protocol_errors += 1
+                self._send_best_effort(
+                    conn, P.encode_error(f"frame of {length} bytes exceeds cap")
+                )
+                self._drop(conn, unregister=registered)
+                return
+            if len(conn.buf) >= 4 + length:
+                frame = bytes(conn.buf[4 : 4 + length])
+                del conn.buf[: 4 + length]
+                if registered:
+                    self._selector.unregister(conn.sock)
+                self._executor.submit(self._handle, conn, frame)
+                return
+        if not registered:
+            self._selector.register(conn.sock, selectors.EVENT_READ, conn)
+
+    def _drop(self, conn: _Conn, unregister: bool = True) -> None:
+        if not conn.alive:
+            return
+        conn.alive = False
+        if unregister:
+            try:
+                self._selector.unregister(conn.sock)
+            except (KeyError, ValueError, OSError):
+                pass
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+        self._conns.discard(conn)
+        with self._stats_lock:
+            self.stats.connections_open -= 1
+
+    def _send_best_effort(self, conn: _Conn, payload: bytes) -> None:
+        try:
+            conn.sock.settimeout(self.send_timeout_s)
+            P.send_frame(conn.sock, payload)
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------ handling
+    def _handle(self, conn: _Conn, frame: bytes) -> None:
+        """Executor worker: decode, run the backend op, respond, re-arm."""
+        try:
+            op, args = P.decode_request(frame)
+        except P.ProtocolError as e:
+            with self._stats_lock:
+                self.stats.protocol_errors += 1
+            self._send_best_effort(conn, P.encode_error(f"protocol error: {e}"))
+            self._drop(conn, unregister=False)
+            return
+        try:
+            result = self._dispatch(op, args)
+            payload = P.encode_ok(op, result)
+        except Exception as e:  # noqa: BLE001 — reported to the client
+            with self._stats_lock:
+                self.stats.errors += 1
+            payload = P.encode_error(f"{type(e).__name__}: {e}")
+        with self._stats_lock:
+            self.stats.requests += 1
+            self.stats.bytes_out += len(payload) + 4
+        try:
+            # bounded send: socket.timeout is an OSError, so a stalled
+            # client is dropped rather than wedging this worker
+            conn.sock.settimeout(self.send_timeout_s)
+            P.send_frame(conn.sock, payload)
+            conn.sock.setblocking(False)
+        except OSError:
+            self._drop(conn, unregister=False)
+            return
+        # another pipelined frame may already be buffered; else re-arm
+        with self._rearm_lock:
+            self._rearm.append(conn)
+        self._wake()
+
+    def _dispatch(self, op: int, args: tuple):
+        b = self.backend
+        if op == P.OP_PING:
+            return None
+        if op == P.OP_PROBE:
+            return b.probe(args[0])
+        if op == P.OP_PROBE_MANY:
+            return b.probe_many(args[0])
+        if op == P.OP_GET:
+            return b.get_batch(args[0], args[1])
+        if op == P.OP_GET_MANY:
+            return b.get_many(args[0])
+        if op == P.OP_PUT:
+            tokens, blocks, start_block, skip_existing = args
+            return b.put_batch(tokens, blocks, start_block=start_block,
+                               skip_existing=skip_existing)
+        if op == P.OP_PUT_MANY:
+            return b.put_many(args[0])
+        if op == P.OP_STATS:
+            st = b.stats
+            fields = {
+                k: v for k, v in st.__dict__.items()
+                if isinstance(v, (int, float))
+            } if not isinstance(st, StoreStats) else dict(st.__dict__)
+            return {
+                "name": getattr(b, "name", "?"),
+                "block_size": b.block_size,
+                "disk_bytes": b.disk_bytes,
+                "file_count": b.file_count,
+                "stats": fields,
+                "server": self.stats.as_dict(),
+            }
+        if op == P.OP_MAINTENANCE:
+            return b.maintenance(args[0])
+        if op == P.OP_FLUSH:
+            b.flush()
+            return None
+        raise P.ProtocolError(f"unknown opcode {op}")

@@ -1,2 +1,9 @@
-"""Distribution layer: sharding rules (DP/FSDP/TP/EP/SP), gradient
-compression, and collective helpers."""
+"""Training-side JAX distribution: sharding rules (DP/FSDP/TP/EP/SP),
+gradient compression, and collective helpers for the model zoo.
+
+Naming note: despite the name, this package has nothing to do with
+*cache* distribution.  It shards model **parameters and activations**
+across JAX device meshes inside one training/serving job.  Distributing
+the KV *cache* across processes/nodes — socket-served cache nodes,
+consistent-hash routing, replication — lives in ``repro.cluster``
+(see ``docs/ARCHITECTURE.md``)."""

@@ -1,5 +1,7 @@
-"""Sharding rules: parameter / batch / cache PartitionSpecs for every
-architecture family, mesh-shape agnostic.
+"""Training-side sharding rules: parameter / batch / decode-cache
+PartitionSpecs for every architecture family, mesh-shape agnostic.
+(Device-mesh sharding of model state — not the KV-cache disk tier;
+cross-process cache sharding is ``repro.cluster``.)
 
 Strategy (DESIGN.md §5):
   * TP over ``model``: attention heads, ffn hidden, expert dim, vocab.

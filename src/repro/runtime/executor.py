@@ -58,10 +58,24 @@ class IOExecutor:
     configured thread counts stays interpretable on any host.
     """
 
-    def __init__(self, max_workers: int = 4, max_pending: Optional[int] = None):
+    def __init__(
+        self,
+        max_workers: int = 4,
+        max_pending: Optional[int] = None,
+        cap_to_cpu: bool = True,
+    ):
+        """``cap_to_cpu=False`` lifts the CPU-count cap for pools whose
+        workers block on the *network* with the GIL released (the cluster
+        client's RPC fan-out): those threads spend their time in
+        ``recv``, not in zlib/numpy, so width beyond the core count buys
+        in-flight RPCs instead of GIL convoy."""
         self.requested_workers = max(0, int(max_workers))
         cpu = os.cpu_count() or 1
-        self.max_workers = min(self.requested_workers, max(1, cpu))
+        self.max_workers = (
+            self.requested_workers
+            if not cap_to_cpu
+            else min(self.requested_workers, max(1, cpu))
+        )
         self.max_pending = max_pending if max_pending is not None else 4 * max(1, self.max_workers)
         self.stats = ExecutorStats()
         self._lock = threading.Lock()

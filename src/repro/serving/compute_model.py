@@ -14,6 +14,13 @@ The model covers segmented prefill: sequences longer than ``segment``
 tokens prefill in chunks with per-segment scheduling overhead, matching the
 paper's observation that long prompts pay extra scheduling/memory-management
 cost under GPU memory pressure.
+
+``ServingEngine`` consumes this model two ways: ``prefill_s`` terms are
+added to each request's TTFT accounting, and with
+``simulate_compute_wall=True`` the modeled duration is also *slept*
+(GIL released) so the pipelined engine has a real compute window to
+overlap promotion I/O under — the honest way to measure overlap on a
+host with no accelerator.
 """
 
 from __future__ import annotations

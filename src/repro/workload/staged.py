@@ -1,6 +1,7 @@
-"""Synthetic staged-hit-rate workload (paper §4.1).
+"""Request generators for every serving benchmark: the paper's staged
+hit-rate workload (§4.1) plus the multi-tenant variant.
 
-The workload progresses through stages with expected hit rates
+``StagedWorkload`` progresses through stages with expected hit rates
 [0.2 0.3 0.5 0.7 0.5 0.3 0.1 0.3 0.5 0.7]; each stage issues
 ``requests_per_stage`` requests of ``prompt_len`` tokens.  The expected hit
 rate is the ratio of shared prompt tokens to total prompt tokens: a request
@@ -10,6 +11,12 @@ prompt (drawn from a warm corpus) and fills the tail with fresh tokens.
 A warmup phase (paper: 100M tokens of KV cache, write-through) populates
 both the memory tiers and the disk backend before measurement; the corpus
 of warmup prefixes is what later stages share against.
+
+``MultiTenantWorkload`` runs M independent staged corpora, each prompt
+tagged with a tenant-id block so tenants never share prefixes — the
+workload that exercises shard/node placement (distinct corpora spread
+across shards of ``ShardedKVBlockStore`` or nodes of a cache cluster,
+while each tenant's extensions stay local to its shard/node).
 """
 
 from __future__ import annotations
