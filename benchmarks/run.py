@@ -148,10 +148,14 @@ def main(argv=None):
             },
             "serving": {
                 "cpu_count": srv["cpu_count"],
+                "per_node_budget_bytes": srv["per_node_budget_bytes"],
                 "nodes": {
                     str(n): {
                         "get_blocks_per_s": row["get_blocks_per_s"],
+                        "served_fraction": row["served_fraction"],
                         "get_speedup": row["get_speedup"],
+                        "time_to_first_block_s": row["time_to_first_block_s"],
+                        "full_batch_get_s": row["full_batch_get_s"],
                         "cpu_utilization": row["cpu_utilization"],
                     }
                     for n, row in srv["nodes"].items()
@@ -166,8 +170,16 @@ def main(argv=None):
         root_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         with open(os.path.join(root_dir, "BENCH_cluster.json"), "w") as f:
             json.dump(bench, f, indent=1)
+        top_srv = max(srv["nodes"])
+        srv_row = srv["nodes"][top_srv]
+        ttfb = srv_row.get("time_to_first_block_s")
+        full = srv_row.get("full_batch_get_s")
+        ttfb_note = (f"; ttfb {1e3 * ttfb:.1f}ms vs full batch {1e3 * full:.1f}ms"
+                     if ttfb is not None and full is not None else "")
         print(f"wrote BENCH_cluster.json ({top}-node served-block throughput "
-              f"{cap['nodes'][top]['speedup']:.2f}x 1-node; failover lost "
+              f"{cap['nodes'][top]['speedup']:.2f}x 1-node; serving "
+              f"{srv_row['get_speedup']:.2f}x at fixed per-node budget"
+              f"{ttfb_note}; failover lost "
               f"{fo['lost_committed_blocks']} committed blocks)")
 
     print(f"\nall benchmarks done in {time.time() - t_all:.0f}s; artifacts in benchmarks/artifacts/")

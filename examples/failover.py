@@ -112,8 +112,15 @@ def main():
     assert still_lost == 0
 
     report = cluster.report()
-    print(f"[report] {report['cluster']}, "
-          f"rpcs={sum(r['rpcs'] for r in report['rpc'].values())}")
+    print(f"[report] cluster: {report['cluster']}, "
+          f"rpcs={sum(r['rpcs'] for r in report['rpc'].values())}, "
+          f"chunks={sum(r['stream_chunks'] for r in report['rpc'].values())}")
+    for i, nd in sorted(report["nodes"].items()):
+        print(f"[report] node {i} ({nd['name']}): "
+              f"disk={nd['disk_bytes'] or 0} B in {nd['file_count']} files, "
+              f"get_blocks={nd['get_blocks']}, put_blocks={nd['put_blocks']}, "
+              f"streams={nd['streams']}, chunks={nd['stream_chunks']}, "
+              f"sendfile={nd['sendfile_bytes'] or 0} B")
     cluster.close()
     for n in nodes:
         n.close()

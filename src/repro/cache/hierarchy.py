@@ -61,6 +61,8 @@ class CacheStats:
     tokens_hit_disk: int = 0
     tokens_missed: int = 0
     promote_s: float = 0.0  # disk -> memory I/O time
+    streamed_fetches: int = 0  # fetches served over a streaming backend
+    first_block_s: float = 0.0  # summed time-to-first-block of those fetches
     demotions: int = 0
     drops: int = 0
     writeback_blocks: int = 0  # commits handed to the write-behind queue
@@ -100,11 +102,85 @@ class AcquirePlan:
 
 @dataclass
 class DiskFetch:
-    """Phase 2 result: the contiguous disk prefix (blocks from index 0)."""
+    """Phase 2 result: the contiguous disk prefix (blocks from index 0).
+
+    ``blocks`` is either a plain list or a lazy ``_StreamedBlocks`` whose
+    tail is still on the wire; ``fulfill`` touches it only through
+    ascending indices and slices, so streamed blocks are consumed in
+    arrival order.  ``first_block_s`` is the fetch-relative
+    time-to-first-block (None when the backend doesn't stream or the
+    fetch was empty)."""
 
     probed_tokens: int = 0
-    blocks: List[np.ndarray] = field(default_factory=list)
+    blocks: Sequence[np.ndarray] = field(default_factory=list)
     io_s: float = 0.0
+    first_block_s: Optional[float] = None
+
+
+class _StreamedBlocks:
+    """List-shaped view over a streaming get: blocks materialize as the
+    wire delivers them, and indexing drains the stream only as far as
+    asked — so ``fulfill`` installs block 0 while blocks 1..N are still
+    in flight.  A transport failure mid-stream truncates the sequence
+    (the hierarchy already treats a short disk read as a shorter hit);
+    it never raises into the tree-mutation path."""
+
+    def __init__(self, stream):
+        self._it = iter(stream)
+        self._got: List[np.ndarray] = []
+        self._done = False
+
+    def _pull_to(self, n: int) -> None:
+        while not self._done and len(self._got) < n:
+            try:
+                blk = next(self._it)
+            except StopIteration:
+                self._done = True
+            except (ConnectionError, OSError):
+                self._done = True  # replicas exhausted: keep the prefix
+            else:
+                self._got.append(blk)
+
+    def prime(self) -> bool:
+        """Pull block 0 (the time-to-first-block moment)."""
+        self._pull_to(1)
+        return bool(self._got)
+
+    def close(self) -> None:
+        """Abort without draining — the consumer took what it needed;
+        chunks still in flight are dropped by the transport."""
+        self._done = True
+        close = getattr(self._it, "close", None)
+        if close is not None:
+            close()
+
+    def __len__(self) -> int:
+        self._pull_to(1 << 62)
+        return len(self._got)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            if i.stop is None or i.stop < 0 or (i.start or 0) < 0 or i.step not in (None, 1):
+                self._pull_to(1 << 62)
+            else:
+                self._pull_to(i.stop)
+            return self._got[i]
+        if i < 0:
+            self._pull_to(1 << 62)
+        else:
+            self._pull_to(i + 1)
+        return self._got[i]
+
+
+def _block_at(blocks: Sequence[np.ndarray], i: int) -> Optional[np.ndarray]:
+    """``blocks[i]`` or None — without forcing a lazy sequence to drain
+    to its end just to answer a bounds check."""
+    if i < 0:
+        return None
+    try:
+        return blocks[i]
+    except IndexError:
+        return None
 
 
 class CacheHierarchy:
@@ -202,10 +278,17 @@ class CacheHierarchy:
         )
 
     def fetch(self, plan: AcquirePlan) -> DiskFetch:
-        """Phase 2 (any thread): backend probe + one batched ``get_batch``
-        covering both the disk extension beyond the radix chain and the
-        chain nodes whose payloads live only on disk.  Touches nothing but
-        the thread-safe store."""
+        """Phase 2 (any thread): backend probe + one batched get covering
+        both the disk extension beyond the radix chain and the chain nodes
+        whose payloads live only on disk.  Touches nothing but the
+        thread-safe store.
+
+        On a streaming backend (one exposing ``get_batch_stream``) this
+        returns as soon as block 0 is on hand: the tail keeps arriving
+        off the wire while ``fulfill`` installs the early blocks, and
+        ``first_block_s`` records the time-to-first-block the serving
+        layer reports.  ``io_s`` then covers only the streamed prefix —
+        the drain happens under ``fulfill``'s own clock."""
         if self.store is None or not plan.need_disk:
             return DiskFetch()
         B = self.block_size
@@ -214,8 +297,26 @@ class CacheHierarchy:
         if plan.chain_blocks < plan.total_blocks:
             probed = self.store.probe(plan.tokens)
         upto = max(probed, plan.disk_chain_depth * B)
-        blocks = self.store.get_batch(plan.tokens, upto) if upto else []
-        return DiskFetch(probed_tokens=probed, blocks=blocks, io_s=time.perf_counter() - t0)
+        if not upto:
+            return DiskFetch(io_s=time.perf_counter() - t0)
+        stream_fn = getattr(self.store, "get_batch_stream", None)
+        if stream_fn is None:
+            blocks = self.store.get_batch(plan.tokens, upto)
+            return DiskFetch(
+                probed_tokens=probed, blocks=blocks, io_s=time.perf_counter() - t0
+            )
+        try:
+            streamed = _StreamedBlocks(stream_fn(plan.tokens, upto))
+        except (ConnectionError, OSError):
+            return DiskFetch(probed_tokens=probed, io_s=time.perf_counter() - t0)
+        first = streamed.prime()  # block 0 lands here; the rest stays in flight
+        now = time.perf_counter()
+        return DiskFetch(
+            probed_tokens=probed,
+            blocks=streamed,
+            io_s=now - t0,
+            first_block_s=(now - t0) if first else None,
+        )
 
     def fulfill(self, plan: AcquirePlan, fetched: Optional[DiskFetch] = None) -> Acquisition:
         """Phase 3 (engine thread): install fetched blocks and promote the
@@ -243,21 +344,28 @@ class CacheHierarchy:
             elif n.tier == TIER_DISK:
                 disk += 1
 
-        # extend the match past the in-memory chain with fetched disk blocks
-        disk_ext_blocks: List[np.ndarray] = []
-        if fetched.probed_tokens > len(chain) * B:
-            disk_ext_blocks = fetched.blocks[len(chain) :]
-            disk += len(disk_ext_blocks)
-
-        # promote disk-resident chain nodes (their data lives only on disk)
-        need_fetch = [n for n in chain if n.tier == TIER_DISK]
-        for n in need_fetch:
-            i = n.depth - 1
-            if i < len(fetched.blocks):
-                n.data = fetched.blocks[i]
+        # promote disk-resident chain nodes first, in ascending depth: on
+        # a streamed fetch these are the earliest blocks off the wire, so
+        # installation starts while the extension is still in flight
+        for n in chain:
+            if n.tier != TIER_DISK:
+                continue
+            blk = _block_at(fetched.blocks, n.depth - 1)
+            if blk is not None:
+                n.data = blk
             else:  # disk lost it (eviction) or the plan predates it: miss
                 n.tier = TIER_NONE
                 disk -= 1
+
+        # extend the match past the in-memory chain with fetched disk
+        # blocks (this slice drains the rest of a streamed fetch)
+        disk_ext_blocks: List[np.ndarray] = []
+        if fetched.probed_tokens > len(chain) * B:
+            disk_ext_blocks = list(fetched.blocks[len(chain) :])
+            disk += len(disk_ext_blocks)
+        abort = getattr(fetched.blocks, "close", None)
+        if abort is not None:
+            abort()  # drop any streamed blocks fulfill didn't need
 
         # materialize the full usable chain on device
         nodes = list(chain)
@@ -289,6 +397,9 @@ class CacheHierarchy:
 
         io_s = fetched.io_s + (time.perf_counter() - t0)
         self.stats.promote_s += io_s
+        if fetched.first_block_s is not None:
+            self.stats.streamed_fetches += 1
+            self.stats.first_block_s += fetched.first_block_s
         reuse = len(usable) * B
         self.stats.tokens_hit_device += dev * B
         self.stats.tokens_hit_host += host * B

@@ -6,16 +6,21 @@ disk tier across processes and hosts (LMCache-style cache cluster).  It
 is unrelated to ``repro.distributed``, which shards *model training*
 (JAX meshes).  See ``docs/ARCHITECTURE.md``.
 
-    CacheNodeServer     one node: socket RPC shim over any backend
-    RemoteKVBlockStore  StorageBackend client for one node (pooling,
-                        batched RPCs, retry)
+    CacheNodeServer     one node: pipelined socket RPC shim over any
+                        backend (sendmsg scatter-gather + sendfile
+                        zero-copy streaming)
+    RemoteKVBlockStore  StorageBackend client for one node (multiplexed
+                        connection, batched RPCs, streaming gets, retry)
     ClusterKVBlockStore StorageBackend over N nodes (HashRing routing,
-                        replication, read-failover, down/rejoin tracking)
+                        replication, read-failover — including
+                        mid-stream — down/rejoin tracking)
+    MuxLoop             shared client-side selector thread
     spawn_local_node    child-process node manager for demos/benchmarks
 """
 
-from .client import NodeUnavailable, RemoteKVBlockStore, RpcStats
-from .cluster_store import ClusterKVBlockStore, ClusterStats
+from .client import BlockStream, NodeUnavailable, RemoteKVBlockStore, RpcStats
+from .cluster_store import ClusterBlockStream, ClusterKVBlockStore, ClusterStats
+from .mux import MuxConnection, MuxLoop
 from .node import NodeProcess, spawn_local_node
 from .protocol import (
     MAX_FRAME_BYTES,
@@ -32,9 +37,13 @@ __all__ = [
     "ServerStats",
     "RemoteKVBlockStore",
     "RpcStats",
+    "BlockStream",
     "NodeUnavailable",
     "ClusterKVBlockStore",
+    "ClusterBlockStream",
     "ClusterStats",
+    "MuxLoop",
+    "MuxConnection",
     "HashRing",
     "key_hash",
     "NodeProcess",

@@ -1,49 +1,75 @@
 """``RemoteKVBlockStore`` — a ``StorageBackend`` whose storage lives in
 another process.
 
-The client speaks the frame protocol to one ``CacheNodeServer`` and
-exposes the full backend contract, so everything built against the
-protocol (``CacheHierarchy``, ``ServingEngine``, the write-behind
-``CommitQueue``, benchmarks) runs against a remote node unchanged — the
-network hop is a constructor argument, never a code change.
+The client speaks the multiplexed frame protocol to one
+``CacheNodeServer`` and exposes the full backend contract, so everything
+built against the protocol (``CacheHierarchy``, ``ServingEngine``, the
+write-behind ``CommitQueue``, benchmarks) runs against a remote node
+unchanged — the network hop is a constructor argument, never a code
+change.
 
 Mechanics:
 
-* **Connection pooling** — a small pool of sockets, checked out per RPC;
-  concurrent callers (the engine's I/O executor, the commit-queue drain
-  thread) each get their own connection, so RPCs overlap instead of
-  serializing on one stream.  Thread-safe by the same coarse-lock
-  discipline as the baseline backends.
+* **Multiplexing** — one connection per node; every RPC is tagged with a
+  request id, so any number of callers (the engine's I/O executor, the
+  commit-queue drain thread) have requests in flight *concurrently* on
+  the same socket, and responses return in whatever order the node
+  finishes them.  The read side is serviced by a shared ``MuxLoop``
+  selector thread (pass ``mux_loop`` to share one loop across a whole
+  cluster's clients); decode runs on the calling thread.
+* **Streaming gets** — ``get_batch_stream`` yields blocks as their
+  chunks arrive, so a consumer starts on block 0 while blocks 1..N are
+  still on the wire; ``get_batch``/``get_many`` are assembled from the
+  same chunk stream.  ``BlockStream.first_block_s`` measures
+  time-to-first-block, the metric the serving benchmarks report.
 * **Request batching** — the multi-sequence ops (``probe_many`` /
   ``get_many`` / ``put_many``) ship as *one* RPC, so a whole engine
-  batch pays one round trip instead of one per sequence (the §3.4 batch
-  operations claim, extended across the wire).  ``put_many`` batches are
-  split when their payload would approach the frame cap.
-* **Retry** — connection-level failures (reset, truncated frame,
-  timeout) are retried on a fresh connection up to ``retries`` times.
-  Every backend op is idempotent (puts are content-addressed, probes and
-  gets are reads), so retry is always safe.  Persistent failure raises
-  ``NodeUnavailable`` — the signal ``ClusterKVBlockStore`` uses to mark
-  the node down and fail over.  ``RemoteError`` (the node ran the op and
-  *reported* a failure) is never retried.
+  batch pays one round trip instead of one per sequence.  ``put_many``
+  batches are split when their payload would approach the frame cap.
 
-``stats`` / ``disk_bytes`` / ``file_count`` are served by the node (the
-remote store's counters); the client keeps its own transport-level
-``rpc_stats`` (RPCs, retries, bytes) for the cluster layer's telemetry.
+Error taxonomy (strict, and load-bearing for the cluster layer):
+
+* **Transport errors** — socket errors, timeouts, connection loss, and
+  *framing* violations (``TruncatedFrame``, ``FrameTooLarge``) — are
+  retried on a fresh connection up to ``retries`` times; persistent
+  failure raises ``NodeUnavailable``, the signal the cluster store uses
+  to mark the node down and fail over.  Every backend op is idempotent
+  (puts are content-addressed, probes and gets are reads), so retry is
+  always safe.  A stream that breaks after its first chunk is **not**
+  retried here — it raises ``NodeUnavailable`` immediately so the
+  caller can fail over to a replica without re-paying the prefix.
+* **Application errors** — ``RemoteError`` (the node ran the op and
+  reported a failure) and ``ProtocolError`` from *body* decode (the
+  frame arrived whole but its contents are malformed) — are never
+  retried and never mapped to ``NodeUnavailable``: they indicate a bug
+  or corruption, not an unreachable node, and hiding them behind retry
+  would turn data errors into spurious failovers.
+
+On any error path the request id is detached before the exception
+propagates, so a waiter is never leaked; a send failure or framing
+violation poisons the whole connection (its stream position is
+unknown), failing all of its in-flight requests with the transport
+error, and the next RPC dials fresh.
 """
 
 from __future__ import annotations
 
-import socket
 import threading
+import time
+import socket
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.store import StoreStats
 from . import protocol as P
+from .mux import MuxConnection, MuxLoop, _StreamWaiter, _UnaryWaiter
 from .server import Address
+
+# transport-level failures: retryable, and the NodeUnavailable trigger.
+# Plain ProtocolError (malformed body) is deliberately NOT here.
+TRANSPORT_ERRORS = (OSError, P.TruncatedFrame, P.FrameTooLarge)
 
 
 class NodeUnavailable(ConnectionError):
@@ -58,9 +84,53 @@ class RpcStats:
     failures: int = 0  # RPCs abandoned after all retries
     bytes_sent: int = 0
     bytes_received: int = 0
+    streams: int = 0
+    stream_chunks: int = 0
+    stream_blocks: int = 0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
+
+
+class BlockStream:
+    """Iterator over one sequence's blocks as they arrive off the wire.
+
+    ``first_block_s`` is the wall-clock delay from request send to the
+    first block being available (time-to-first-block); ``served`` counts
+    blocks yielded so far.  Iteration raises ``NodeUnavailable`` if the
+    transport dies mid-stream — a partial prefix was yielded, and it is
+    the *caller's* job to treat it as partial (the cluster store resumes
+    from a replica; the hierarchy truncates to what arrived)."""
+
+    def __init__(self, events: Iterator):
+        self._events = events
+        self._t0 = time.perf_counter()
+        self.first_block_s: Optional[float] = None
+        self.served = 0
+
+    def __iter__(self):
+        for kind, data in self._events:
+            if kind == "chunk":
+                _, start_block, blocks = data
+                if start_block != self.served:
+                    raise P.ProtocolError(
+                        f"stream chunk starts at block {start_block}, expected {self.served}"
+                    )
+                for b in blocks:
+                    if self.first_block_s is None:
+                        self.first_block_s = time.perf_counter() - self._t0
+                    self.served += 1
+                    yield b
+            else:  # end
+                counts = data
+                if counts and counts[0] != self.served:
+                    raise P.ProtocolError(
+                        f"stream end reports {counts[0]} blocks, received {self.served}"
+                    )
+                return
+
+    def close(self) -> None:
+        self._events.close()
 
 
 class RemoteKVBlockStore:
@@ -72,33 +142,40 @@ class RemoteKVBlockStore:
         self,
         address: Address,
         block_size: Optional[int] = None,
-        pool_size: int = 2,
         timeout_s: float = 30.0,
         connect_timeout_s: float = 5.0,
         retries: int = 2,
         max_frame_bytes: int = P.MAX_FRAME_BYTES,
         put_chunk_bytes: int = 32 * 1024 * 1024,
+        chunk_blocks: int = 4,
+        mux_loop: Optional[MuxLoop] = None,
+        pool_size: Optional[int] = None,  # retained for compat; mux needs one conn
     ):
         """``block_size=None`` fetches it from the node at construction
         (requires the node to be up); pass it explicitly to construct a
-        client for a node that may currently be down."""
+        client for a node that may currently be down.  ``chunk_blocks``
+        is the streaming granularity requested from the node (blocks per
+        CHUNK frame).  Pass a shared ``mux_loop`` to run many node
+        clients off one selector thread (the cluster store does)."""
         self.address = address
-        self.pool_size = pool_size
         self.timeout_s = timeout_s
         self.connect_timeout_s = connect_timeout_s
         self.retries = retries
         self.max_frame_bytes = max_frame_bytes
         self.put_chunk_bytes = put_chunk_bytes
+        self.chunk_blocks = max(1, int(chunk_blocks))
         self.rpc_stats = RpcStats()
         self._lock = threading.Lock()
-        self._idle: List[socket.socket] = []
+        self._mux: Optional[MuxConnection] = None
+        self._owns_loop = mux_loop is None
+        self._loop = mux_loop if mux_loop is not None else MuxLoop()
         self._closed = False
         if block_size is None:
             block_size = int(self._rpc(P.OP_STATS)["block_size"])
         self.block_size = block_size
 
     # ------------------------------------------------------------ transport
-    def _connect(self) -> socket.socket:
+    def _dial(self) -> socket.socket:
         try:
             if isinstance(self.address, str):
                 sock = socket.socket(socket.AF_UNIX)
@@ -111,64 +188,70 @@ class RemoteKVBlockStore:
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError as e:
             raise NodeUnavailable(f"connect to {self.address}: {e}") from e
-        sock.settimeout(self.timeout_s)
         with self._lock:
             self.rpc_stats.connects += 1
         return sock
 
-    def _checkout(self) -> socket.socket:
+    def _conn(self) -> MuxConnection:
         with self._lock:
-            if self._idle:
-                return self._idle.pop()
-        return self._connect()
-
-    def _checkin(self, sock: socket.socket) -> None:
+            if self._closed:
+                raise NodeUnavailable(f"client for {self.address} is closed")
+            if self._mux is not None and self._mux.alive:
+                return self._mux
+        sock = self._dial()
+        conn = MuxConnection(sock, self._loop, self.max_frame_bytes, self.timeout_s)
         with self._lock:
-            if not self._closed and len(self._idle) < self.pool_size:
-                self._idle.append(sock)
-                return
-        try:
-            sock.close()
-        except OSError:
-            pass
+            if self._closed or (self._mux is not None and self._mux.alive):
+                # lost the dial race (or closed meanwhile): keep the winner
+                winner = self._mux
+                conn.close()
+                if self._closed or winner is None:
+                    raise NodeUnavailable(f"client for {self.address} is closed")
+                return winner
+            self._mux = conn
+            return conn
 
-    def _rpc(self, op: int, *args):
+    def _transport_call(self, op: int, args: tuple) -> bytes:
+        """One attempt: send a tagged request, wait for its RESPONSE.
+        Raises only transport errors (or the caller's own bugs)."""
         request = P.encode_request(op, *args)
-        if len(request) + 4 > self.max_frame_bytes:
+        if len(request) + 4 + P.MUX_HDR_BYTES > self.max_frame_bytes:
             raise ValueError(
                 f"request of {len(request)} bytes exceeds frame cap "
                 f"{self.max_frame_bytes}; split the batch"
             )
+        conn = self._conn()
+        waiter = _UnaryWaiter()
+        rid = conn.attach(waiter)
+        try:
+            sent = conn.send_request(rid, request)
+            payload = waiter.wait(self.timeout_s)
+        finally:
+            conn.detach(rid)  # never leak a waiter, success or not
+        with self._lock:
+            self.rpc_stats.rpcs += 1
+            self.rpc_stats.bytes_sent += sent
+            self.rpc_stats.bytes_received += len(payload) + 4 + P.MUX_HDR_BYTES
+        return payload
+
+    def _rpc(self, op: int, *args):
         last: Optional[Exception] = None
         for attempt in range(self.retries + 1):
             if attempt:
                 with self._lock:
                     self.rpc_stats.retries += 1
-            sock: Optional[socket.socket] = None
             try:
-                sock = self._checkout()
-                P.send_frame(sock, request)
-                payload = P.recv_frame(sock, self.max_frame_bytes)
-                if payload is None:
-                    raise P.TruncatedFrame("node closed the connection mid-RPC")
-                result = P.decode_response(op, payload)
-                with self._lock:
-                    self.rpc_stats.rpcs += 1
-                    self.rpc_stats.bytes_sent += len(request) + 4
-                    self.rpc_stats.bytes_received += len(payload) + 4
-                self._checkin(sock)
-                return result
-            except P.RemoteError:
-                # the node is healthy and executed the op: not retryable
-                self._checkin(sock)
-                raise
-            except (OSError, P.ProtocolError) as e:
+                payload = self._transport_call(op, args)
+            except NodeUnavailable as e:
                 last = e
-                if sock is not None:
-                    try:
-                        sock.close()
-                    except OSError:
-                        pass
+                continue
+            except TRANSPORT_ERRORS as e:
+                last = e
+                continue
+            # Decode outside the retry net: RemoteError (node reported a
+            # failure) and ProtocolError (malformed body) are application
+            # errors — raising them here, not retrying, is the contract.
+            return P.decode_response(op, payload)
         with self._lock:
             self.rpc_stats.failures += 1
         raise NodeUnavailable(f"node {self.address} unreachable: {last}") from last
@@ -180,6 +263,76 @@ class RemoteKVBlockStore:
             return True
         except NodeUnavailable:
             return False
+
+    # ------------------------------------------------------------ streaming
+    def _stream_events(self, op: int, *args) -> Iterator:
+        """Generator of decoded stream events: ``("chunk", (seq_index,
+        start_block, blocks))`` then ``("end", counts)``.  Transport
+        failures are retried only while nothing has arrived; after the
+        first chunk they raise ``NodeUnavailable`` (the caller fails
+        over rather than re-pulling the prefix)."""
+        request = P.encode_request(op, *args)
+        last: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                with self._lock:
+                    self.rpc_stats.retries += 1
+            got_any = False
+            try:
+                conn = self._conn()
+                waiter = _StreamWaiter()
+                rid = conn.attach(waiter)
+                try:
+                    sent = conn.send_request(rid, request)
+                    with self._lock:
+                        self.rpc_stats.streams += 1
+                        self.rpc_stats.bytes_sent += sent
+                    while True:
+                        kind, payload = waiter.next_event(self.timeout_s)
+                        if kind == "err":
+                            raise payload
+                        with self._lock:
+                            self.rpc_stats.bytes_received += len(payload) + 4 + P.MUX_HDR_BYTES
+                        if kind == "chunk":
+                            got_any = True
+                            seq, start, blocks = P.decode_stream_chunk(payload)
+                            with self._lock:
+                                self.rpc_stats.stream_chunks += 1
+                                self.rpc_stats.stream_blocks += len(blocks)
+                            yield ("chunk", (seq, start, blocks))
+                        else:  # end
+                            yield ("end", P.decode_stream_end(payload))
+                            return
+                finally:
+                    conn.detach(rid)
+            except NodeUnavailable as e:
+                last = e
+            except TRANSPORT_ERRORS as e:
+                last = e
+            if got_any:
+                # mid-stream loss: the caller has a partial prefix; do not
+                # silently restart — surface it for replica failover
+                with self._lock:
+                    self.rpc_stats.failures += 1
+                raise NodeUnavailable(
+                    f"node {self.address} died mid-stream: {last}"
+                ) from last
+        with self._lock:
+            self.rpc_stats.failures += 1
+        raise NodeUnavailable(f"node {self.address} unreachable: {last}") from last
+
+    def get_batch_stream(
+        self, tokens: Sequence[int], n_tokens: int, chunk_blocks: Optional[int] = None
+    ) -> BlockStream:
+        """Stream the cached blocks covering ``tokens[:n_tokens]`` as
+        they arrive.  Lazy: the request is sent on first iteration, and
+        ``first_block_s`` measures from construction — construct and
+        consume promptly."""
+        cb = self.chunk_blocks if chunk_blocks is None else max(1, int(chunk_blocks))
+        events = self._stream_events(
+            P.OP_GET_STREAM, list(tokens), int(n_tokens), cb
+        )
+        return BlockStream(events)
 
     # ------------------------------------------------------------- contract
     def put_batch(
@@ -197,7 +350,7 @@ class RemoteKVBlockStore:
         return int(self._rpc(P.OP_PROBE, list(tokens)))
 
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
-        return self._rpc(P.OP_GET, list(tokens), int(n_tokens))
+        return list(self.get_batch_stream(tokens, n_tokens))
 
     def probe_many(self, seqs: Sequence[Sequence[int]]) -> List[int]:
         if not seqs:
@@ -209,7 +362,28 @@ class RemoteKVBlockStore:
     ) -> List[List[np.ndarray]]:
         if not items:
             return []
-        return self._rpc(P.OP_GET_MANY, [(list(t), int(n)) for t, n in items])
+        out: List[List[np.ndarray]] = [[] for _ in items]
+        events = self._stream_events(
+            P.OP_GET_MANY_STREAM,
+            [(list(t), int(n)) for t, n in items],
+            self.chunk_blocks,
+        )
+        for kind, data in events:
+            if kind == "chunk":
+                si, start, blocks = data
+                if si >= len(out) or start != len(out[si]):
+                    raise P.ProtocolError(
+                        f"stream chunk for seq {si} starts at {start}, "
+                        f"expected {len(out[si]) if si < len(out) else '<bad seq>'}"
+                    )
+                out[si].extend(blocks)
+            else:
+                counts = data
+                if counts != [len(o) for o in out]:
+                    raise P.ProtocolError(
+                        f"stream end counts {counts} != received {[len(o) for o in out]}"
+                    )
+        return out
 
     def put_many(
         self, items: Sequence[Tuple[Sequence[int], Sequence[np.ndarray], int]]
@@ -238,21 +412,23 @@ class RemoteKVBlockStore:
         self._rpc(P.OP_FLUSH)
 
     def close(self) -> None:
-        """Close the client's connections (the node itself stays up — its
+        """Close the client's connection (the node itself stays up — its
         lifecycle belongs to whoever spawned it)."""
         with self._lock:
             self._closed = True
-            idle, self._idle = self._idle, []
-        for sock in idle:
-            try:
-                sock.close()
-            except OSError:
-                pass
+            conn, self._mux = self._mux, None
+        if conn is not None:
+            conn.close()
+        if self._owns_loop:
+            self._loop.close()
 
     # ---------------------------------------------------------------- stats
     def node_report(self) -> dict:
-        """Raw node-side report: store stats + server transport counters."""
-        return self._rpc(P.OP_STATS)
+        """Raw node-side report: store stats + server transport counters,
+        plus this client's own transport-level view."""
+        report = self._rpc(P.OP_STATS)
+        report["client"] = self.rpc_stats.as_dict()
+        return report
 
     @property
     def stats(self) -> StoreStats:

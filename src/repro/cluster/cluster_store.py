@@ -39,8 +39,9 @@ and ``MaintenanceService`` work against a cluster unchanged.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -48,6 +49,7 @@ from ..core.backend import merge_stats
 from ..core.store import StoreStats
 from ..runtime.executor import IOExecutor
 from .client import NodeUnavailable, RemoteKVBlockStore
+from .mux import MuxLoop
 from .ring import HashRing, key_hash
 from .server import Address
 
@@ -90,6 +92,14 @@ class ClusterKVBlockStore:
         on a different port/host, and is reproducible across runs."""
         if not nodes:
             raise ValueError("cluster needs at least one node")
+        # one selector thread services every node connection's read side:
+        # client-side concurrency is "requests in flight", not threads
+        self._mux_loop: Optional[MuxLoop] = None
+        if any(not isinstance(n, RemoteKVBlockStore) for n in nodes) and (
+            "mux_loop" not in client_kwargs
+        ):
+            self._mux_loop = MuxLoop()
+            client_kwargs = dict(client_kwargs, mux_loop=self._mux_loop)
         self.nodes: List[RemoteKVBlockStore] = []
         for n in nodes:
             if isinstance(n, RemoteKVBlockStore):
@@ -239,6 +249,16 @@ class ClusterKVBlockStore:
             if len(best) >= want_blocks:
                 break
         return best
+
+    def get_batch_stream(self, tokens: Sequence[int], n_tokens: int) -> "ClusterBlockStream":
+        """Streaming read with mid-stream failover: blocks are yielded as
+        they arrive from the primary replica; if the stream breaks after
+        ``k`` blocks, the next live replica resumes — blocks are
+        content-addressed, so replica ``r``'s block ``k`` is bit-identical
+        to the dead primary's and the stitched prefix stays exact.  A
+        short stream is a short *prefix*, never a hole: the consumer
+        commits exactly the blocks it received."""
+        return ClusterBlockStream(self, tokens, n_tokens)
 
     # ------------------------------------------------------------- fan-out
     def _groups(
@@ -397,6 +417,8 @@ class ClusterKVBlockStore:
             self._executor.close()
         for c in self.nodes:
             c.close()
+        if self._mux_loop is not None:
+            self._mux_loop.close()
 
     # ---------------------------------------------------------------- stats
     def _sum_live(self, attr: str) -> int:
@@ -426,10 +448,23 @@ class ClusterKVBlockStore:
     def file_count(self) -> int:
         return self._sum_live("file_count")
 
-    def report(self) -> dict:
-        """Cluster-level telemetry: membership, failover counters, and the
-        per-client transport stats."""
-        return {
+    def node_reports(self) -> Dict[int, dict]:
+        """Raw per-node reports — backend stats, server transport
+        counters, and this side's client transport view.  Unreachable
+        nodes are marked down and omitted."""
+        out: Dict[int, dict] = {}
+        for i in self.live_nodes:
+            try:
+                out[i] = self.nodes[i].node_report()
+            except NodeUnavailable:
+                self.mark_down(i)
+        return out
+
+    def report(self, include_nodes: bool = True) -> dict:
+        """Cluster-level telemetry: membership, failover counters, the
+        per-client transport stats, and (by default) a compact per-node
+        backend/server summary aggregated from each node's STATS."""
+        rep = {
             "n_nodes": len(self.nodes),
             "replication": self.replication,
             "live": self.live_nodes,
@@ -437,3 +472,74 @@ class ClusterKVBlockStore:
             "cluster": self.cluster_stats.as_dict(),
             "rpc": {i: c.rpc_stats.as_dict() for i, c in enumerate(self.nodes)},
         }
+        if include_nodes:
+            nodes = {}
+            for i, nrep in self.node_reports().items():
+                st, srv = nrep.get("stats", {}), nrep.get("server", {})
+                nodes[i] = {
+                    "name": nrep.get("name"),
+                    "disk_bytes": nrep.get("disk_bytes"),
+                    "file_count": nrep.get("file_count"),
+                    "get_blocks": st.get("get_blocks"),
+                    "put_blocks": st.get("put_blocks"),
+                    "raw_gets": st.get("raw_gets"),
+                    "streams": srv.get("streams"),
+                    "stream_chunks": srv.get("stream_chunks"),
+                    "sendfile_bytes": srv.get("sendfile_bytes"),
+                }
+            rep["nodes"] = nodes
+        return rep
+
+
+class ClusterBlockStream:
+    """Iterator over one sequence's blocks, stitched across replicas on
+    mid-stream failure.  ``first_block_s`` is time-to-first-block from
+    construction; ``served`` counts blocks yielded; ``failovers`` counts
+    replica switches that contributed blocks."""
+
+    def __init__(self, store: ClusterKVBlockStore, tokens: Sequence[int], n_tokens: int):
+        self._store = store
+        self._tokens = list(tokens)
+        self._n_tokens = int(n_tokens)
+        self._t0 = time.perf_counter()
+        self.first_block_s: Optional[float] = None
+        self.served = 0
+        self.failovers = 0
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        store = self._store
+        want = self._n_tokens // store.block_size
+        if want == 0:
+            return
+        replicas = store._live_pref(self._tokens, read=True)[: store.replication]
+        for rank, idx in enumerate(replicas):
+            if self.served >= want:
+                return
+            contributed = False
+            try:
+                node_stream = store.nodes[idx].get_batch_stream(
+                    self._tokens, self._n_tokens
+                )
+                # a later replica re-streams from block 0; skip what was
+                # already yielded (content addressing: identical bytes)
+                skip = self.served
+                for b in node_stream:
+                    if skip:
+                        skip -= 1
+                        continue
+                    if rank > 0 and not contributed:
+                        contributed = True
+                        self.failovers += 1
+                        with store._lock:
+                            store.cluster_stats.failovers += 1
+                    if self.first_block_s is None:
+                        self.first_block_s = time.perf_counter() - self._t0
+                    self.served += 1
+                    yield b
+                if self.served >= want:
+                    return
+                # clean but short: a cold replica may still extend the run
+            except NodeUnavailable:
+                store.mark_down(idx)
+                continue
+        # replicas exhausted: the stream ends as a (possibly short) prefix

@@ -70,12 +70,14 @@ def main(argv=None) -> int:
                     help="server-side request concurrency (the node's serving width)")
     ap.add_argument("--store-io-threads", type=int, default=0,
                     help="sharded backend's internal fan-out threads")
+    ap.add_argument("--no-zero-copy", action="store_true",
+                    help="disable the sendfile streaming path (A/B measurement)")
     args = ap.parse_args(argv)
 
     backend = make_backend(args)
     server = CacheNodeServer(
         backend, host=args.host, port=args.port, unix_path=args.unix_path,
-        io_threads=args.io_threads,
+        io_threads=args.io_threads, zero_copy=not args.no_zero_copy,
     ).start()
     if isinstance(server.address, str):
         print(f"READY unix={server.address}", flush=True)

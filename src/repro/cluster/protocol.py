@@ -1,11 +1,24 @@
-"""Wire protocol of the cache cluster: length-prefixed binary frames.
+"""Wire protocol of the cache cluster: length-prefixed, multiplexed
+binary frames.
 
-Every RPC is one request frame and one response frame over a stream
-socket (TCP or ``AF_UNIX``):
+Many RPCs share one stream socket (TCP or ``AF_UNIX``) concurrently —
+every frame carries a client-chosen request id, so responses may return
+in any order and a streaming response interleaves with other traffic:
 
     frame    :=  u32 payload_len (big-endian) | payload
-    request  :=  u8 opcode | body
-    response :=  u8 status  | body          status 0 = ok, 1 = error
+    payload  :=  u32 request_id | u8 kind | body
+    kind     :=  0 REQUEST | 1 RESPONSE | 2 CHUNK | 3 END
+
+    REQUEST  body :=  u8 opcode | args
+    RESPONSE body :=  u8 status | result     status 0 = ok, 1 = error
+    CHUNK    body :=  u32 seq_index | u32 start_block | block list
+    END      body :=  u8 status | u32 n | u32 served_counts[n]
+
+Unary ops complete with a single RESPONSE.  The streaming gets
+(``OP_GET_STREAM`` / ``OP_GET_MANY_STREAM``) emit zero or more CHUNK
+frames followed by exactly one END summarizing blocks served per
+sequence — the client starts consuming block 0 while later blocks are
+still on the wire.
 
 Bodies are flat ``struct``-packed binary — token sequences ride as the
 same big-endian ``u32`` words the key codec uses on disk, tensor blocks
@@ -23,6 +36,15 @@ long as its blocks do.  Heterogeneous lists fall back to a per-block
 layout (layout byte 0).  This matters for scalability: the client is one
 GIL domain fanning out to N nodes, and per-block decode bursts would
 starve the very socket reads that keep those nodes busy.
+
+A third layout (byte 2) carries *raw tensor-log records* — the exact
+``u32 crc | u32 klen | u32 plen | key | payload`` bytes sitting on the
+node's disk.  When the blocks of a chunk are one contiguous log extent,
+the server ``os.sendfile``s them straight from the log file into the
+socket — no read into Python, no re-encode — and the client CRC-checks
+and ``BatchCodec.decode``s each record (the payload is self-describing),
+paying the decode CPU it would have paid anyway while the node stays out
+of the copy path entirely.
 
 Robustness contract (property-tested in ``tests/test_cluster.py``):
 
@@ -46,9 +68,12 @@ from __future__ import annotations
 import json
 import socket
 import struct
+import zlib
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from ..core.codec import BatchCodec
 
 # Default cap on one frame.  A frame carries at most one batch of KV
 # blocks; 256 MiB is ~64k blocks of 4 KiB — far beyond any batch the
@@ -70,6 +95,8 @@ OP_PUT_MANY = 7
 OP_STATS = 8
 OP_MAINTENANCE = 9
 OP_FLUSH = 10
+OP_GET_STREAM = 11
+OP_GET_MANY_STREAM = 12
 
 OP_NAMES = {
     OP_PING: "ping",
@@ -82,10 +109,23 @@ OP_NAMES = {
     OP_STATS: "stats",
     OP_MAINTENANCE: "maintenance",
     OP_FLUSH: "flush",
+    OP_GET_STREAM: "get_stream",
+    OP_GET_MANY_STREAM: "get_many_stream",
 }
+
+STREAM_OPS = (OP_GET_STREAM, OP_GET_MANY_STREAM)
 
 STATUS_OK = 0
 STATUS_ERROR = 1
+
+# ------------------------------------------------------------- mux frames
+KIND_REQUEST = 0
+KIND_RESPONSE = 1
+KIND_CHUNK = 2
+KIND_END = 3
+
+_MUX = struct.Struct(">IB")
+MUX_HDR_BYTES = _MUX.size  # 5: u32 request_id | u8 kind
 
 
 class ProtocolError(Exception):
@@ -105,6 +145,20 @@ class RemoteError(Exception):
 
 
 # ----------------------------------------------------------------- framing
+def pack_mux(request_id: int, kind: int) -> bytes:
+    return _MUX.pack(request_id & 0xFFFFFFFF, kind)
+
+
+def split_mux(payload) -> Tuple[int, int, memoryview]:
+    """``(request_id, kind, body)`` — body is a zero-copy view."""
+    if len(payload) < MUX_HDR_BYTES:
+        raise ProtocolError(f"mux frame of {len(payload)} bytes has no header")
+    rid, kind = _MUX.unpack_from(payload)
+    if kind > KIND_END:
+        raise ProtocolError(f"unknown frame kind {kind}")
+    return rid, kind, memoryview(payload)[MUX_HDR_BYTES:]
+
+
 def send_frame(sock: socket.socket, payload: bytes) -> None:
     if len(payload) >= 1 << 16:
         # two sends spare a multi-MiB concat copy; small frames stay one
@@ -112,6 +166,29 @@ def send_frame(sock: socket.socket, payload: bytes) -> None:
         sock.sendall(payload)
     else:
         sock.sendall(_U32.pack(len(payload)) + payload)
+
+
+def send_frame_parts(sock: socket.socket, parts: Sequence) -> int:
+    """Scatter-gather send of one frame built from ``parts`` (bytes or
+    memoryview): the u32 length prefix is prepended and the whole vector
+    handed to ``sendmsg``, so a multi-part frame (mux header + chunk
+    header + tensor payload) goes out in one syscall with no concat
+    copy.  Loops on partial sends.  Returns total bytes sent."""
+    views = [memoryview(p).cast("B") for p in parts]
+    total = sum(len(v) for v in views)
+    views.insert(0, memoryview(_U32.pack(total)))
+    sent_total = total + 4
+    if not hasattr(sock, "sendmsg"):  # pragma: no cover — all POSIX targets have it
+        sock.sendall(b"".join(views))
+        return sent_total
+    while views:
+        sent = sock.sendmsg(views)
+        while views and sent >= len(views[0]):
+            sent -= len(views[0])
+            views.pop(0)
+        if sent and views:
+            views[0] = views[0][sent:]
+    return sent_total
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytearray]:
@@ -275,6 +352,8 @@ def encode_request(op: int, *args) -> bytes:
     PUT (tokens, blocks, start_block, skip_existing)
     PUT_MANY (items,)                 items = [(tokens, blocks, start), ...]
     STATS () / MAINTENANCE (compact_steps,) / FLUSH ()
+    GET_STREAM (tokens, n_tokens, chunk_blocks)
+    GET_MANY_STREAM (items, chunk_blocks)
     """
     parts: List = [struct.pack(">B", op)]
     if op in (OP_PING, OP_STATS, OP_FLUSH):
@@ -304,6 +383,12 @@ def encode_request(op: int, *args) -> bytes:
             parts.extend(_enc_blocks(bs))
     elif op == OP_MAINTENANCE:
         parts.append(_U32.pack(args[0]))
+    elif op == OP_GET_STREAM:
+        parts.append(_enc_tokens(args[0]) + _U64.pack(args[1]) + _U32.pack(args[2]))
+    elif op == OP_GET_MANY_STREAM:
+        parts.append(_U32.pack(len(args[0])))
+        parts.extend(_enc_tokens(t) + _U64.pack(n) for t, n in args[0])
+        parts.append(_U32.pack(args[1]))
     else:
         raise ProtocolError(f"unknown opcode {op}")
     return b"".join(parts)
@@ -340,6 +425,11 @@ def decode_request(payload: bytes) -> Tuple[int, tuple]:
         args = (items,)
     elif op == OP_MAINTENANCE:
         args = (r.u32(),)
+    elif op == OP_GET_STREAM:
+        args = (_dec_tokens(r), r.u64(), r.u32())
+    elif op == OP_GET_MANY_STREAM:
+        items = [(_dec_tokens(r), r.u64()) for _ in range(r.u32())]
+        args = (items, r.u32())
     else:
         raise ProtocolError(f"unknown opcode {op}")
     r.done()
@@ -404,3 +494,97 @@ def decode_response(op: int, payload: bytes):
         raise ProtocolError(f"unknown opcode {op}")
     r.done()
     return result
+
+
+# ------------------------------------------------------------ stream chunks
+# chunk body := u32 seq_index | u32 start_block | u32 n | u8 layout | ...
+# layouts 0/1 are the block-list layouts above; layout 2 is raw tensor-log
+# records (server sendfile path, client-side CRC + BatchCodec decode).
+LAYOUT_VLOG = 2
+_VLOG_HDR = struct.Struct("<III")  # crc | klen | plen — the on-disk record header
+
+
+def encode_stream_chunk(seq_index: int, start_block: int, blocks: Sequence[np.ndarray]) -> List:
+    """Encode one decoded-blocks chunk as parts for ``send_frame_parts``."""
+    return [_U32.pack(seq_index), _U32.pack(start_block)] + _enc_blocks(blocks)
+
+
+def encode_vlog_chunk_header(seq_index: int, start_block: int, n_records: int, nbytes: int) -> bytes:
+    """Header of a layout-2 chunk; the ``nbytes`` of raw log records that
+    follow are shipped by ``os.sendfile`` straight from the log file."""
+    return (
+        _U32.pack(seq_index) + _U32.pack(start_block)
+        + _U32.pack(n_records) + b"\x02" + _U64.pack(nbytes)
+    )
+
+
+def _dec_vlog_records(r: _Reader, n: int) -> List[np.ndarray]:
+    nbytes = r.u64()
+    raw = r.take(nbytes)
+    blocks: List[np.ndarray] = []
+    pos = 0
+    for _ in range(n):
+        if pos + _VLOG_HDR.size > nbytes:
+            raise ProtocolError(f"vlog chunk truncated at record {len(blocks)}")
+        crc, klen, plen = _VLOG_HDR.unpack_from(raw, pos)
+        body = raw[pos + _VLOG_HDR.size : pos + _VLOG_HDR.size + klen + plen]
+        if len(body) != klen + plen:
+            raise ProtocolError(f"vlog chunk truncated at record {len(blocks)}")
+        if zlib.crc32(body) & 0xFFFFFFFF != crc:
+            raise ProtocolError(f"vlog record CRC mismatch at record {len(blocks)}")
+        try:
+            blocks.append(BatchCodec.decode(body[klen:]))
+        except (struct.error, KeyError, ValueError, zlib.error) as e:
+            raise ProtocolError(f"bad vlog record payload: {e}") from e
+        pos += _VLOG_HDR.size + klen + plen
+    if pos != nbytes:
+        raise ProtocolError(f"{nbytes - pos} trailing bytes after vlog records")
+    return blocks
+
+
+def decode_stream_chunk(body) -> Tuple[int, int, List[np.ndarray]]:
+    """``(seq_index, start_block, blocks)`` from one CHUNK body."""
+    r = _Reader(body)
+    seq_index = r.u32()
+    start_block = r.u32()
+    n = r.u32()
+    layout = r.u8()
+    if layout == LAYOUT_VLOG:
+        blocks = _dec_vlog_records(r, n)
+    elif layout == 0:
+        blocks = [_dec_block(r) for _ in range(n)]
+    elif layout == 1:
+        dtype, shape = _dec_dtype_head(r)
+        nbytes = r.u64()
+        if nbytes != n * _block_nbytes(dtype, shape):
+            raise ProtocolError(f"packed byte count {nbytes} != {n} x dtype/shape product")
+        raw = r.take(nbytes)
+        blocks = list(np.frombuffer(raw, dtype=dtype).reshape((n,) + shape))
+    else:
+        raise ProtocolError(f"unknown block layout {layout}")
+    r.done()
+    return seq_index, start_block, blocks
+
+
+def encode_stream_end(counts: Sequence[int]) -> bytes:
+    """END frame body: per-sequence blocks-served totals (the client
+    verifies its assembled streams against these)."""
+    return (
+        struct.pack(">B", STATUS_OK)
+        + _U32.pack(len(counts))
+        + b"".join(_U32.pack(int(c)) for c in counts)
+    )
+
+
+def decode_stream_end(body) -> List[int]:
+    """Served-count list from an END body; raises ``RemoteError`` if the
+    node aborted the stream with an application failure."""
+    r = _Reader(body)
+    status = r.u8()
+    if status == STATUS_ERROR:
+        raise RemoteError(bytes(r.buf[r.pos :]).decode("utf-8", "replace"))
+    if status != STATUS_OK:
+        raise ProtocolError(f"unknown stream end status {status}")
+    counts = [r.u32() for _ in range(r.u32())]
+    r.done()
+    return counts

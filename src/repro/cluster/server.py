@@ -10,29 +10,47 @@ Architecture (one node):
     acceptor/selector thread          IOExecutor (N workers)
     ─────────────────────────────────────────────────────────
     accept, read socket bytes,   ──►  decode request
-    reassemble frames                 run the backend op
-    (non-blocking, all conns)         send the response frame
-                                 ◄──  re-arm the connection
+    reassemble frames,                run the backend op
+    submit each to the pool           send tagged response frame(s)
+    (non-blocking, all conns)         (per-connection write lock)
 
-A connection is *unregistered* from the selector while its request is
-being served and re-armed afterwards, so one connection has at most one
-request in flight (matching the synchronous client) and response writes
-never interleave.  Requests from *different* connections run
-concurrently on the executor — the same bounded pool discipline as the
-in-process runtime layer: when all workers are busy the selector thread
-blocks on admission, which backpressures every client instead of
-queueing unboundedly.
+Connections are **pipelined**: every complete frame is handed to the
+executor as it arrives, so one connection can have many requests in
+flight and responses return in completion order, tagged with the request
+id the client chose — this is the server half of the multiplexed
+protocol.  Writes from concurrent workers serialize on a per-connection
+lock; frames never interleave.  When all workers are busy the selector
+thread blocks on pool admission, which backpressures every client
+instead of queueing unboundedly.
+
+Streaming gets (``OP_GET_STREAM`` / ``OP_GET_MANY_STREAM``) emit CHUNK
+frames as blocks become available and an END frame with per-sequence
+totals.  Two send paths:
+
+* **scatter-gather** — decoded blocks go out with one ``sendmsg`` per
+  chunk (mux header + chunk header + packed tensor region), no concat
+  copy;
+* **zero-copy** — when the backend can hand the chunk as a contiguous
+  tensor-log extent (``get_batch_raw``), the records are pushed with
+  ``os.sendfile`` straight from the log file to the socket: the payload
+  bytes never enter Python, and the node's CPU stays out of the read
+  path entirely (the client decodes — it was going to pay that CPU
+  anyway).  The open file descriptor pins the inode, so eviction
+  unlinking the file mid-send is harmless.
 
 Transports: TCP (``host``/``port``) or ``AF_UNIX`` (``unix_path``) — the
-frame protocol is transport-agnostic.
+frame protocol is transport-agnostic (``os.sendfile`` works on both).
 """
 
 from __future__ import annotations
 
+import errno
 import os
+import select
 import selectors
 import socket
 import threading
+import time
 from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
@@ -41,6 +59,11 @@ from ..runtime.executor import IOExecutor
 from . import protocol as P
 
 Address = Union[Tuple[str, int], str]  # (host, port) or unix socket path
+
+_DONTWAIT = getattr(socket, "MSG_DONTWAIT", 0)
+# errnos that mean "sendfile cannot work here at all" (vs. a dead peer):
+# flip to the copying path instead of erroring every stream.
+_SENDFILE_UNSUPPORTED = {errno.EINVAL, errno.ENOSYS, errno.EOPNOTSUPP, errno.ENOTSOCK}
 
 
 @dataclass
@@ -52,18 +75,24 @@ class ServerStats:
     protocol_errors: int = 0  # malformed frames (connection dropped)
     bytes_in: int = 0
     bytes_out: int = 0
+    streams: int = 0
+    stream_chunks: int = 0
+    stream_blocks: int = 0
+    raw_extents: int = 0  # chunks served straight from the tensor log
+    sendfile_bytes: int = 0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
 
 class _Conn:
-    __slots__ = ("sock", "buf", "alive")
+    __slots__ = ("sock", "buf", "alive", "wlock")
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
         self.buf = bytearray()
         self.alive = True
+        self.wlock = threading.Lock()  # concurrent workers; frames never interleave
 
 
 class CacheNodeServer:
@@ -77,22 +106,35 @@ class CacheNodeServer:
         io_executor: Optional[IOExecutor] = None,
         max_frame_bytes: int = P.MAX_FRAME_BYTES,
         send_timeout_s: float = 30.0,
+        zero_copy: bool = True,
+        max_chunk_blocks: int = 1024,
     ):
         """``send_timeout_s`` bounds response writes: a client that stops
         reading (stalled, hostile) gets dropped instead of wedging an
         executor worker forever — with a small pool, unbounded sends
-        would eventually wedge every worker and stop the whole node."""
+        would eventually wedge every worker and stop the whole node.
+        ``zero_copy=False`` disables the sendfile path (every chunk is
+        read + decoded + re-encoded host-side, for A/B measurement)."""
         self.backend = backend
         self.max_frame_bytes = max_frame_bytes
         self.send_timeout_s = send_timeout_s
+        self.max_chunk_blocks = max(1, int(max_chunk_blocks))
+        self.zero_copy = bool(zero_copy) and hasattr(os, "sendfile")
         self.stats = ServerStats()
         self._stats_lock = threading.Lock()
         if io_executor is not None:
             self._executor, self._owns_executor = io_executor, False
         else:
             # handlers are short (one request), so pending-job admission can
-            # be generous: stalls mean every worker is mid-request already
-            self._executor = IOExecutor(max_workers=max(1, io_threads), max_pending=64)
+            # be generous: stalls mean every worker is mid-request already.
+            # io_threads is the node's *serving width* — these workers block
+            # on disk reads and sendall/sendfile with the GIL released, so
+            # the width must not be silently clamped to the core count (a
+            # 1-core host still wants 2 in-flight requests so a slow get
+            # cannot head-of-line block the connection)
+            self._executor = IOExecutor(
+                max_workers=max(1, io_threads), max_pending=64, cap_to_cpu=False
+            )
             self._owns_executor = True
         if unix_path is not None:
             self._listener = socket.socket(socket.AF_UNIX)
@@ -109,12 +151,10 @@ class CacheNodeServer:
         self._listener.setblocking(False)
         self._selector = selectors.DefaultSelector()
         self._selector.register(self._listener, selectors.EVENT_READ, "accept")
-        # self-pipe so executor workers can wake the selector to re-arm conns
+        # self-pipe so close() can wake the selector promptly
         self._wake_r, self._wake_w = socket.socketpair()
         self._wake_r.setblocking(False)
         self._selector.register(self._wake_r, selectors.EVENT_READ, "wake")
-        self._rearm: list = []
-        self._rearm_lock = threading.Lock()
         self._conns: set = set()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, name="cache-node", daemon=True)
@@ -158,11 +198,6 @@ class CacheNodeServer:
     def _loop(self) -> None:
         while not self._stop.is_set():
             events = self._selector.select(timeout=0.5)
-            with self._rearm_lock:
-                rearm, self._rearm = self._rearm, []
-            for conn in rearm:
-                if conn.alive:
-                    self._pump(conn)
             for key, _ in events:
                 if key.data == "accept":
                     self._accept()
@@ -180,7 +215,9 @@ class CacheNodeServer:
                 sock, _ = self._listener.accept()
             except (BlockingIOError, OSError):
                 return
-            sock.setblocking(False)
+            # timeout mode: reads happen when the selector says readable;
+            # writes (from executor workers) block at most send_timeout_s
+            sock.settimeout(self.send_timeout_s)
             conn = _Conn(sock)
             self._conns.add(conn)
             with self._stats_lock:
@@ -190,8 +227,8 @@ class CacheNodeServer:
 
     def _read(self, conn: _Conn) -> None:
         try:
-            chunk = conn.sock.recv(1 << 20)
-        except BlockingIOError:
+            chunk = conn.sock.recv(1 << 20, _DONTWAIT)
+        except (BlockingIOError, InterruptedError):
             return
         except OSError:
             self._drop(conn)
@@ -202,33 +239,46 @@ class CacheNodeServer:
         conn.buf += chunk
         with self._stats_lock:
             self.stats.bytes_in += len(chunk)
-        self._pump(conn, registered=True)
+        self._pump(conn)
 
-    def _pump(self, conn: _Conn, registered: bool = False) -> None:
-        """If a full frame is buffered, hand it to the executor (the conn
-        leaves the selector until the response is sent); otherwise (re-)arm
-        the connection for reading."""
-        if len(conn.buf) >= 4:
+    def _pump(self, conn: _Conn) -> None:
+        """Hand every complete buffered frame to the executor — requests
+        on one connection are pipelined, not one-at-a-time."""
+        while conn.alive and len(conn.buf) >= 4:
             length = int.from_bytes(conn.buf[:4], "big")
             if length > self.max_frame_bytes:
                 # reject before allocating/reading the body: a corrupt
                 # length word must not OOM the node or desync the stream
                 with self._stats_lock:
                     self.stats.protocol_errors += 1
+                # tag the error with the claimed rid if its bytes arrived
+                rid = int.from_bytes(conn.buf[4:8], "big") if len(conn.buf) >= 8 else 0
                 self._send_best_effort(
-                    conn, P.encode_error(f"frame of {length} bytes exceeds cap")
+                    conn, rid, P.encode_error(f"frame of {length} bytes exceeds cap")
                 )
-                self._drop(conn, unregister=registered)
+                self._drop(conn)
                 return
-            if len(conn.buf) >= 4 + length:
-                frame = bytes(conn.buf[4 : 4 + length])
-                del conn.buf[: 4 + length]
-                if registered:
-                    self._selector.unregister(conn.sock)
-                self._executor.submit(self._handle, conn, frame)
+            if len(conn.buf) < 4 + length:
                 return
-        if not registered:
-            self._selector.register(conn.sock, selectors.EVENT_READ, conn)
+            payload = bytes(conn.buf[4 : 4 + length])
+            del conn.buf[: 4 + length]
+            try:
+                rid, kind, body = P.split_mux(payload)
+            except P.ProtocolError:
+                with self._stats_lock:
+                    self.stats.protocol_errors += 1
+                self._send_best_effort(conn, 0, P.encode_error("malformed mux frame"))
+                self._drop(conn)
+                return
+            if kind != P.KIND_REQUEST:
+                with self._stats_lock:
+                    self.stats.protocol_errors += 1
+                self._send_best_effort(
+                    conn, rid, P.encode_error(f"unexpected frame kind {kind}")
+                )
+                self._drop(conn)
+                return
+            self._executor.submit(self._handle, conn, rid, bytes(body))
 
     def _drop(self, conn: _Conn, unregister: bool = True) -> None:
         if not conn.alive:
@@ -247,23 +297,36 @@ class CacheNodeServer:
         with self._stats_lock:
             self.stats.connections_open -= 1
 
-    def _send_best_effort(self, conn: _Conn, payload: bytes) -> None:
+    # ------------------------------------------------------------- sending
+    def _send(self, conn: _Conn, rid: int, kind: int, parts) -> int:
+        """One tagged frame, under the connection's write lock.  OSError
+        (including the bounded-send timeout) propagates to the caller,
+        which drops the connection."""
+        with conn.wlock:
+            n = P.send_frame_parts(conn.sock, [P.pack_mux(rid, kind)] + list(parts))
+        with self._stats_lock:
+            self.stats.bytes_out += n
+        return n
+
+    def _send_best_effort(self, conn: _Conn, rid: int, payload: bytes) -> None:
         try:
-            conn.sock.settimeout(self.send_timeout_s)
-            P.send_frame(conn.sock, payload)
+            self._send(conn, rid, P.KIND_RESPONSE, [payload])
         except OSError:
             pass
 
     # ------------------------------------------------------------ handling
-    def _handle(self, conn: _Conn, frame: bytes) -> None:
-        """Executor worker: decode, run the backend op, respond, re-arm."""
+    def _handle(self, conn: _Conn, rid: int, request: bytes) -> None:
+        """Executor worker: decode, run the backend op, respond."""
         try:
-            op, args = P.decode_request(frame)
+            op, args = P.decode_request(request)
         except P.ProtocolError as e:
             with self._stats_lock:
                 self.stats.protocol_errors += 1
-            self._send_best_effort(conn, P.encode_error(f"protocol error: {e}"))
-            self._drop(conn, unregister=False)
+            self._send_best_effort(conn, rid, P.encode_error(f"protocol error: {e}"))
+            self._drop(conn)
+            return
+        if op in P.STREAM_OPS:
+            self._handle_stream(conn, rid, op, args)
             return
         try:
             result = self._dispatch(op, args)
@@ -274,21 +337,141 @@ class CacheNodeServer:
             payload = P.encode_error(f"{type(e).__name__}: {e}")
         with self._stats_lock:
             self.stats.requests += 1
-            self.stats.bytes_out += len(payload) + 4
         try:
-            # bounded send: socket.timeout is an OSError, so a stalled
-            # client is dropped rather than wedging this worker
-            conn.sock.settimeout(self.send_timeout_s)
-            P.send_frame(conn.sock, payload)
-            conn.sock.setblocking(False)
+            self._send(conn, rid, P.KIND_RESPONSE, [payload])
         except OSError:
-            self._drop(conn, unregister=False)
-            return
-        # another pipelined frame may already be buffered; else re-arm
-        with self._rearm_lock:
-            self._rearm.append(conn)
-        self._wake()
+            self._drop(conn)
 
+    # ----------------------------------------------------------- streaming
+    def _handle_stream(self, conn: _Conn, rid: int, op: int, args: tuple) -> None:
+        if op == P.OP_GET_STREAM:
+            tokens, n_tokens, chunk_blocks = args
+            items = [(tokens, n_tokens)]
+        else:
+            items, chunk_blocks = args
+        chunk_blocks = max(1, min(int(chunk_blocks), self.max_chunk_blocks))
+        with self._stats_lock:
+            self.stats.requests += 1
+            self.stats.streams += 1
+        counts = []
+        try:
+            for seq_index, (tokens, n_tokens) in enumerate(items):
+                counts.append(
+                    self._stream_item(conn, rid, seq_index, tokens, n_tokens, chunk_blocks)
+                )
+        except OSError:
+            self._drop(conn)
+            return
+        except Exception as e:  # noqa: BLE001 — abort the stream, report
+            with self._stats_lock:
+                self.stats.errors += 1
+            try:
+                self._send(conn, rid, P.KIND_END, [P.encode_error(f"{type(e).__name__}: {e}")])
+            except OSError:
+                self._drop(conn)
+            return
+        try:
+            self._send(conn, rid, P.KIND_END, [P.encode_stream_end(counts)])
+        except OSError:
+            self._drop(conn)
+
+    def _stream_item(
+        self, conn: _Conn, rid: int, seq_index: int, tokens, n_tokens: int, chunk_blocks: int
+    ) -> int:
+        """Stream one sequence's blocks as CHUNK frames; returns blocks
+        served.  Prefers the zero-copy extent path, falls back to the
+        decoded path (which re-encodes over the wire format)."""
+        if self.zero_copy:
+            raw_fn = getattr(self.backend, "get_batch_raw", None)
+            if raw_fn is not None:
+                rb = raw_fn(tokens, n_tokens)
+                if rb is not None:
+                    try:
+                        return self._stream_raw(conn, rid, seq_index, rb, chunk_blocks)
+                    finally:
+                        rb.close()
+        blocks = self.backend.get_batch(tokens, n_tokens)
+        for start in range(0, len(blocks), chunk_blocks):
+            part = blocks[start : start + chunk_blocks]
+            self._send(
+                conn, rid, P.KIND_CHUNK, P.encode_stream_chunk(seq_index, start, part)
+            )
+            with self._stats_lock:
+                self.stats.stream_chunks += 1
+                self.stats.stream_blocks += len(part)
+        return len(blocks)
+
+    def _stream_raw(self, conn: _Conn, rid: int, seq_index: int, rb, chunk_blocks: int) -> int:
+        """Zero-copy chunk emission: frame headers via ``sendmsg``, then
+        ``os.sendfile`` pushes the raw log records kernel-to-kernel."""
+        in_fd = rb.file.fileno()
+        offset = rb.offset
+        i = 0
+        while i < rb.n_blocks:
+            lens = rb.record_lengths[i : i + chunk_blocks]
+            nbytes = sum(lens)
+            hdr = P.encode_vlog_chunk_header(seq_index, i, len(lens), nbytes)
+            mux = P.pack_mux(rid, P.KIND_CHUNK)
+            frame_len = len(mux) + len(hdr) + nbytes
+            with conn.wlock:
+                conn.sock.sendall(
+                    frame_len.to_bytes(4, "big") + mux + hdr
+                )
+                self._sendfile(conn.sock, in_fd, offset, nbytes)
+            with self._stats_lock:
+                self.stats.bytes_out += 4 + frame_len
+                self.stats.stream_chunks += 1
+                self.stats.stream_blocks += len(lens)
+                self.stats.raw_extents += 1
+                self.stats.sendfile_bytes += nbytes
+            offset += nbytes
+            i += len(lens)
+        return rb.n_blocks
+
+    def _sendfile(self, sock: socket.socket, in_fd: int, offset: int, nbytes: int) -> None:
+        """``os.sendfile`` with the same bounded-send discipline as
+        ``sendall``: the socket fd is non-blocking (timeout mode), so
+        loop on EAGAIN with a writability wait and an overall deadline."""
+        out_fd = sock.fileno()
+        sent = 0
+        deadline = time.monotonic() + self.send_timeout_s
+        while sent < nbytes:
+            try:
+                n = os.sendfile(out_fd, in_fd, offset + sent, nbytes - sent)
+            except (BlockingIOError, InterruptedError):
+                n = 0
+            except OSError as e:
+                if e.errno in _SENDFILE_UNSUPPORTED and sent == 0 and self.zero_copy:
+                    # environment can't sendfile at all: fall back to a
+                    # plain copy of the records (frame header already out,
+                    # so the byte stream must be completed either way)
+                    self.zero_copy = False
+                    self._copy_file_range(sock, in_fd, offset, nbytes, deadline)
+                    return
+                raise
+            if n == 0:
+                if time.monotonic() > deadline:
+                    raise socket.timeout(f"sendfile stalled after {sent}/{nbytes} bytes")
+                select.select([], [out_fd], [], 0.2)
+                continue
+            sent += n
+
+    def _copy_file_range(
+        self, sock: socket.socket, in_fd: int, offset: int, nbytes: int, deadline: float
+    ) -> None:
+        remaining = nbytes
+        pos = offset
+        while remaining:
+            if time.monotonic() > deadline:
+                raise socket.timeout("stream send stalled")
+            data = os.pread(in_fd, min(remaining, 1 << 20), pos)
+            if not data:
+                raise OSError(f"log file truncated {remaining} bytes short")
+            sock.sendall(data)
+            pos += len(data)
+            remaining -= len(data)
+
+    # ------------------------------------------------------------ dispatch
     def _dispatch(self, op: int, args: tuple):
         b = self.backend
         if op == P.OP_PING:

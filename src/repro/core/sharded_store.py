@@ -175,6 +175,12 @@ class ShardedKVBlockStore:
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
         return self.shard_for(tokens).get_batch(tokens, n_tokens)
 
+    def get_batch_raw(self, tokens: Sequence[int], n_tokens: int):
+        """Sendfile-able extent for the sequence, if its shard has one
+        (a prefix tree lives entirely on one shard, so this is a pure
+        delegation)."""
+        return self.shard_for(tokens).get_batch_raw(tokens, n_tokens)
+
     # ------------------------------------------------------- parallel fan-out
     def _shard_groups(self, seqs: Sequence[Sequence[int]]) -> Dict[int, List[int]]:
         """Map shard index -> positions in ``seqs`` routed to it."""

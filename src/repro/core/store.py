@@ -66,10 +66,38 @@ class StoreStats:
     evicted_blocks: int = 0
     io_read_s: float = 0.0
     io_write_s: float = 0.0
+    raw_gets: int = 0  # get_batch_raw calls that found a sendfile-able extent
+    raw_get_blocks: int = 0
 
     @property
     def compression_ratio(self) -> float:
         return self.payload_bytes_in / max(1, self.payload_bytes_stored)
+
+
+@dataclass
+class RawBatch:
+    """A contiguous run of encoded blocks, as an *open file* plus an
+    extent — the zero-copy handoff behind the cluster server's
+    ``os.sendfile`` path.  The open handle pins the inode, so the bytes
+    stay readable even if eviction unlinks the file mid-send.  The
+    records are the on-disk ``crc | klen | plen | key | payload`` format;
+    ``record_lengths[i]`` is the full length of block ``i``'s record, in
+    ascending block order.  The caller owns ``file`` and must close it."""
+
+    file: object
+    offset: int
+    length: int
+    record_lengths: List[int]
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.record_lengths)
+
+    def close(self) -> None:
+        try:
+            self.file.close()
+        except OSError:
+            pass
 
 
 class KVBlockStore(BatchOpsMixin):
@@ -308,6 +336,39 @@ class KVBlockStore(BatchOpsMixin):
             self.stats.get_tokens += len(out) * B
             self.stats.io_read_s += time.perf_counter() - t0
         return out
+
+    def get_batch_raw(self, tokens: Sequence[int], n_tokens: int) -> Optional[RawBatch]:
+        """Zero-copy variant of ``get_batch``: when the contiguous cached
+        prefix sits as one adjacent run of records in a single tensor-log
+        file (the common case — a sequence is appended in one batch),
+        return it as an open-file extent instead of reading and decoding.
+        Returns ``None`` when no such extent exists (blocks span files,
+        interleave with other writes, or the store is empty) — callers
+        fall back to ``get_batch``."""
+        B = self.block_size
+        n_blocks = n_tokens // B
+        if n_blocks == 0:
+            return None
+        ptrs = self._scan_block_ptrs(tokens, n_blocks)
+        run = []
+        for p in ptrs:
+            if p is None:
+                break
+            run.append(p)
+        if not run:
+            return None
+        ext = self.log.extent_for(run)
+        if ext is None:
+            return None
+        try:
+            f = open(ext.path, "rb")
+        except FileNotFoundError:
+            return None  # lost the race with eviction/merge; caller retries decoded
+        with self._stats_lock:
+            self.stats.raw_gets += 1
+            self.stats.raw_get_blocks += len(run)
+        return RawBatch(file=f, offset=ext.offset, length=ext.length,
+                        record_lengths=list(ext.record_lengths))
 
     # ------------------------------------------------------------ lifecycle
     def maintenance(self, compact_steps: int = 8) -> dict:

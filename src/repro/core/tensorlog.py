@@ -36,6 +36,19 @@ _HDR = struct.Struct("<III")
 
 
 @dataclass(frozen=True)
+class LogExtent:
+    """A run of whole records that is byte-contiguous in one log file —
+    the unit the cluster server can ``os.sendfile`` straight into a
+    socket.  ``record_lengths`` preserves the per-record boundaries so
+    the sender can split the extent at record granularity."""
+
+    path: str
+    offset: int
+    length: int
+    record_lengths: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
 class LogPointer:
     file_id: int
     offset: int
@@ -193,6 +206,22 @@ class TensorLog:
         with self._lock:
             self.seq_reads += seq_reads
         return out
+
+    def extent_for(self, ptrs: Sequence[LogPointer]) -> "LogExtent | None":
+        """The single contiguous extent covering ``ptrs`` in order, or
+        ``None`` when the records span files or are not strictly
+        adjacent.  Batch appends write records back-to-back, so a
+        sequence stored in one ``append_batch`` call (the common case:
+        one ``put_batch`` per sequence) qualifies."""
+        if not ptrs:
+            return None
+        fid, off = ptrs[0].file_id, ptrs[0].offset
+        end = off
+        for p in ptrs:
+            if p.file_id != fid or p.offset != end:
+                return None
+            end += p.length
+        return LogExtent(self._path(fid), off, end - off, tuple(p.length for p in ptrs))
 
     def scan_file(self, file_id: int) -> Iterator:
         """Yield (ptr, key, payload) for every record in a file (merge/GC)."""

@@ -135,6 +135,36 @@ class IOExecutor:
         fut.add_done_callback(self._on_done)
         return fut
 
+    def try_submit(self, fn: Callable[..., T], *args, **kwargs) -> "Optional[Future[T]]":
+        """Like ``submit`` but never blocks: returns ``None`` instead of
+        waiting when the admission gate is full.  This is the prefetcher's
+        probe — checking ``in_flight`` and then calling ``submit`` would
+        race other submitters into the very stall the check tried to
+        avoid; here the slot is claimed under the same lock that counts
+        it."""
+        if self._closed:
+            raise RuntimeError("IOExecutor is closed")
+        if self._pool is None:
+            return self.submit(fn, *args, **kwargs)
+        with self._slot_free:
+            if self._in_flight >= self.max_pending:
+                return None
+            self._in_flight += 1
+            self.stats.submitted += 1
+            self.stats.queue_depth_max = max(self.stats.queue_depth_max, self._in_flight)
+
+        def _run():
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                with self._slot_free:
+                    self._in_flight -= 1
+                    self._slot_free.notify()
+
+        fut = self._pool.submit(_run)
+        fut.add_done_callback(self._on_done)
+        return fut
+
     def _on_done(self, fut: Future) -> None:
         with self._lock:
             if fut.cancelled() or fut.exception() is not None:

@@ -55,6 +55,7 @@ class RequestRecord:
     reused_tokens: int = 0
     io_s: float = 0.0
     io_wait_s: float = 0.0  # non-overlapped wait on the prefetch future
+    first_block_s: Optional[float] = None  # streamed fetch: time-to-first-block
     compute_s: float = 0.0
     ttft_s: float = 0.0
     hedged: bool = False
@@ -80,11 +81,18 @@ class EngineStats:
     overlap_io_s: float = 0.0  # I/O executed under the previous batch's service
 
     ttfts: List[float] = field(default_factory=list)
+    ttfbs: List[float] = field(default_factory=list)  # streamed fetches only
     hits: List[float] = field(default_factory=list)
 
     @property
     def mean_ttft(self) -> float:
         return float(np.mean(self.ttfts)) if self.ttfts else 0.0
+
+    @property
+    def mean_ttfb(self) -> float:
+        """Mean time-to-first-block across fetches that streamed — the
+        latency at which the pipeline starts installing disk state."""
+        return float(np.mean(self.ttfbs)) if self.ttfbs else 0.0
 
     @property
     def mean_hit(self) -> float:
@@ -196,11 +204,14 @@ class ServingEngine:
             plan = self.h.plan(r.tokens)
             fut = None
             # never stall the engine thread on the admission gate: if the
-            # pool is saturated, leave the fetch to _resolve_fetch (it will
-            # run at serve time, when slots have freed)
-            if prefetch and plan.need_disk and ex is not None and ex.in_flight < ex.max_pending:
-                fut = ex.submit(self.h.fetch, plan)
-                self.stats.prefetched_requests += 1
+            # pool is saturated, try_submit declines and the fetch runs at
+            # serve time in _resolve_fetch, when slots have freed.  (The
+            # old in_flight < max_pending check raced other submitters
+            # into exactly the stall it was written to avoid.)
+            if prefetch and plan.need_disk:
+                fut = ex.try_submit(self.h.fetch, plan)
+                if fut is not None:
+                    self.stats.prefetched_requests += 1
             staged.append(_Staged(req=r, plan=plan, future=fut))
         return staged
 
@@ -312,8 +323,10 @@ class ServingEngine:
         tokens = req.tokens
         B = self.h.block_size
         prefetched = st.future is not None
+        first_block_s: Optional[float] = None
         if self.runtime is not None:
             fetched, wait_s, hedged = self._resolve_fetch(st)
+            first_block_s = fetched.first_block_s
             t1 = time.perf_counter()
             acq = self.h.fulfill(st.plan, fetched)
             install_s = time.perf_counter() - t1
@@ -352,6 +365,7 @@ class ServingEngine:
             reused_tokens=reused,
             io_s=io_s,
             io_wait_s=wait_s,
+            first_block_s=first_block_s,
             compute_s=compute_s,
             ttft_s=io_s + compute_s,
             hedged=hedged,
@@ -360,6 +374,8 @@ class ServingEngine:
         )
         self.stats.completed += 1
         self.stats.ttfts.append(rec.ttft_s)
+        if first_block_s is not None:
+            self.stats.ttfbs.append(first_block_s)
         self.stats.hits.append(reused / max(1, len(tokens)))
         return rec
 
@@ -370,6 +386,8 @@ class ServingEngine:
         out: Dict = {
             "completed": self.stats.completed,
             "mean_ttft_s": self.stats.mean_ttft,
+            "mean_time_to_first_block_s": self.stats.mean_ttfb,
+            "streamed_fetches": len(self.stats.ttfbs),
             "mean_hit": self.stats.mean_hit,
             "hedged_reads": self.stats.hedged_reads,
             "prefetched_requests": self.stats.prefetched_requests,

@@ -155,8 +155,10 @@ def test_server_rejects_oversized_frame_cleanly():
         rogue = socket.create_connection(srv.address, timeout=5)
         rogue.sendall((2**30).to_bytes(4, "big"))
         payload = P.recv_frame(rogue)
+        rid, kind, body = P.split_mux(payload)
+        assert kind == P.KIND_RESPONSE
         with pytest.raises(RemoteError, match="exceeds cap"):
-            P.decode_response(P.OP_PING, payload)
+            P.decode_response(P.OP_PING, bytes(body))
         assert rogue.recv(1) == b""  # server closed the rogue connection
         rogue.close()
         assert RemoteKVBlockStore(srv.address).ping()  # node still healthy

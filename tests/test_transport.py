@@ -1,0 +1,393 @@
+"""Multiplexed streaming transport: the properties the mux rewrite must
+hold under fire.
+
+* out-of-order completion — a slow request must not head-of-line block a
+  fast one sharing the connection,
+* independent streams — one node stalling its stream must not stall a
+  stream from another node on the same ``MuxLoop``,
+* truncated mid-chunk frames -> ``NodeUnavailable`` (transport error),
+  while malformed-but-whole bodies -> ``ProtocolError`` with **zero**
+  retries and a connection that stays usable,
+* mid-stream node death -> replica failover that stitches the exact
+  block sequence, and — at the hierarchy level — a partial stream is
+  committed only as the prefix that actually arrived,
+* the sendfile zero-copy path serves bit-identical payloads.
+
+Fake nodes are raw listening sockets speaking just enough of the frame
+protocol to inject the failure; real ``CacheNodeServer``s cover the
+honest paths.
+"""
+
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cache.hierarchy import CacheHierarchy
+from repro.cluster import (
+    CacheNodeServer,
+    ClusterKVBlockStore,
+    NodeUnavailable,
+    RemoteKVBlockStore,
+)
+from repro.cluster import protocol as P
+from repro.core.baselines import MemoryOnlyStore
+from repro.core.store import KVBlockStore
+
+B = 4
+
+
+def _blocks(rng, n, dtype=np.float32):
+    return [rng.standard_normal((2, B, 4)).astype(dtype) for _ in range(n)]
+
+
+def _seq(rng, nblocks):
+    return [int(x) for x in rng.integers(0, 50_000, nblocks * B)]
+
+
+def _mux_frame(rid: int, kind: int, parts) -> bytes:
+    """A complete wire frame: u32 len | u32 rid | u8 kind | body."""
+    body = b"".join(bytes(p) for p in parts)
+    payload = P.pack_mux(rid, kind) + body
+    return len(payload).to_bytes(4, "big") + payload
+
+
+class _FakeNode:
+    """A listening socket + a per-connection handler run on a thread.
+    ``handler(conn, rid, op, args)`` is called once per request frame and
+    returns raw bytes to send (or None to close the connection)."""
+
+    def __init__(self, handler):
+        self.handler = handler
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(8)
+        self.address = self.sock.getsockname()
+        self._stop = False
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        while not self._stop:
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            try:
+                while True:
+                    frame = P.recv_frame(conn)
+                    if frame is None:
+                        break
+                    rid, kind, body = P.split_mux(frame)
+                    op, args = P.decode_request(bytes(body))
+                    out = self.handler(conn, rid, op, args)
+                    if out is None:
+                        break
+                    conn.sendall(out)
+            except (OSError, P.ProtocolError):
+                pass
+            finally:
+                conn.close()
+
+    def close(self):
+        self._stop = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout=5)
+
+
+# ===================================================== out-of-order muxing
+class _SlowFirstStore(MemoryOnlyStore):
+    """Marks the FIRST get slow: it must not delay a later fast get that
+    shares the connection."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.slow_done = threading.Event()
+        self._first = True
+
+    def get_batch(self, tokens, n_tokens):
+        if self._first:
+            self._first = False
+            time.sleep(0.4)
+            self.slow_done.set()
+        return super().get_batch(tokens, n_tokens)
+
+
+def test_responses_interleave_out_of_order_on_one_connection():
+    store = _SlowFirstStore(1 << 24, block_size=B)
+    rng = np.random.default_rng(0)
+    slow_toks, fast_toks = _seq(rng, 2), _seq(rng, 2)
+    with CacheNodeServer(store, io_threads=2) as srv:
+        remote = RemoteKVBlockStore(srv.address, retries=0)
+        remote.put_batch(slow_toks, _blocks(rng, 2))
+        remote.put_batch(fast_toks, _blocks(rng, 2))
+        store._first = True  # arm the slow path for the race below
+        done = {}
+
+        def get(name, toks):
+            got = remote.get_batch(toks, 2 * B)
+            done[name] = (time.perf_counter(), len(got))
+
+        t_slow = threading.Thread(target=get, args=("slow", slow_toks))
+        t_slow.start()
+        time.sleep(0.05)  # slow get is in flight on the shared connection
+        get("fast", fast_toks)
+        t_slow.join()
+        assert done["slow"][1] == done["fast"][1] == 2
+        # the fast response overtook the slow one on the same socket
+        assert done["fast"][0] < done["slow"][0]
+        assert store.slow_done.is_set()
+        assert remote.rpc_stats.retries == 0
+        remote.close()
+
+
+def test_one_stalled_stream_does_not_stall_another_node():
+    """Two node clients on one shared MuxLoop: a node sleeping mid-stream
+    must not delay another node's stream (the loop thread never decodes)."""
+    from repro.cluster import MuxLoop
+
+    class _StallStore(MemoryOnlyStore):
+        def get_batch(self, tokens, n_tokens):
+            time.sleep(0.5)
+            return super().get_batch(tokens, n_tokens)
+
+    rng = np.random.default_rng(1)
+    toks = _seq(rng, 2)
+    blocks = _blocks(rng, 2)
+    loop = MuxLoop()
+    slow_store = _StallStore(1 << 24, block_size=B)
+    fast_store = MemoryOnlyStore(1 << 24, block_size=B)
+    with CacheNodeServer(slow_store, io_threads=1) as slow_srv, CacheNodeServer(
+        fast_store, io_threads=1
+    ) as fast_srv:
+        slow = RemoteKVBlockStore(slow_srv.address, mux_loop=loop, retries=0)
+        fast = RemoteKVBlockStore(fast_srv.address, mux_loop=loop, retries=0)
+        MemoryOnlyStore.put_batch(slow_store, toks, blocks)  # skip the stall
+        fast.put_batch(toks, blocks)
+        t0 = time.perf_counter()
+        results = {}
+
+        def drain(name, client):
+            results[name] = (list(client.get_batch_stream(toks, 2 * B)),
+                             time.perf_counter() - t0)
+
+        ts = threading.Thread(target=drain, args=("slow", slow))
+        ts.start()
+        time.sleep(0.05)
+        drain("fast", fast)
+        ts.join()
+        assert len(results["fast"][0]) == len(results["slow"][0]) == 2
+        assert results["fast"][1] < 0.4 < results["slow"][1]
+        slow.close()
+        fast.close()
+    loop.close()
+
+
+# ================================================== error taxonomy on wire
+def test_truncated_mid_chunk_frame_raises_node_unavailable():
+    """A stream that dies inside a chunk is a *transport* failure: the
+    client yields the blocks that arrived whole, then raises
+    NodeUnavailable (the failover signal) — never a hang, never a retry
+    that would silently re-pull the prefix."""
+    rng = np.random.default_rng(2)
+    blocks = _blocks(rng, 2)
+
+    def handler(conn, rid, op, args):
+        if op == P.OP_STATS:
+            return _mux_frame(rid, P.KIND_RESPONSE,
+                              [P.encode_ok(op, {"name": "fake", "block_size": B,
+                                                "stats": {}})])
+        assert op == P.OP_GET_STREAM
+        conn.sendall(_mux_frame(rid, P.KIND_CHUNK,
+                                P.encode_stream_chunk(0, 0, [blocks[0]])))
+        # second chunk: advertise a length, deliver half, die
+        whole = _mux_frame(rid, P.KIND_CHUNK,
+                           P.encode_stream_chunk(0, 1, [blocks[1]]))
+        conn.sendall(whole[: len(whole) // 2])
+        return None  # close mid-frame
+
+    fake = _FakeNode(handler)
+    try:
+        remote = RemoteKVBlockStore(fake.address, retries=2, timeout_s=5.0)
+        got = []
+        with pytest.raises(NodeUnavailable):
+            for b in remote.get_batch_stream([1, 2, 3, 4], 2 * B):
+                got.append(b)
+        assert len(got) == 1 and np.array_equal(got[0], blocks[0])
+        remote.close()
+    finally:
+        fake.close()
+
+
+def test_malformed_body_raises_protocol_error_without_retry():
+    """A whole-but-garbage RESPONSE body is an application error: raised
+    immediately (zero retries — retrying corruption hides bugs) and the
+    connection survives for the next call."""
+    calls = {"n": 0}
+
+    def handler(conn, rid, op, args):
+        if op == P.OP_STATS:
+            return _mux_frame(rid, P.KIND_RESPONSE,
+                              [P.encode_ok(op, {"name": "fake", "block_size": B,
+                                                "stats": {}})])
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return _mux_frame(rid, P.KIND_RESPONSE, [b"\x63garbage-not-a-response"])
+        return _mux_frame(rid, P.KIND_RESPONSE, [P.encode_ok(P.OP_PROBE, 8)])
+
+    fake = _FakeNode(handler)
+    try:
+        remote = RemoteKVBlockStore(fake.address, retries=2, timeout_s=5.0)
+        with pytest.raises(P.ProtocolError):
+            remote.probe([1, 2, 3, 4])
+        assert remote.rpc_stats.retries == 0
+        assert remote.rpc_stats.connects == 1
+        # same connection answers the next call (not poisoned, not redialed)
+        assert remote.probe([1, 2, 3, 4]) == 8
+        assert remote.rpc_stats.connects == 1
+        remote.close()
+    finally:
+        fake.close()
+
+
+# ===================================================== mid-stream failover
+def test_mid_stream_death_fails_over_and_stitches_exact_blocks():
+    """R=2: the primary dies after streaming one block; the cluster
+    stream resumes from the replica, skipping what was already yielded —
+    the stitched sequence is bit-identical to the committed blocks."""
+    rng = np.random.default_rng(3)
+    n_blocks = 4
+    blocks = _blocks(rng, n_blocks)
+
+    def dying_handler(conn, rid, op, args):
+        if op == P.OP_STATS:
+            return _mux_frame(rid, P.KIND_RESPONSE,
+                              [P.encode_ok(op, {"name": "fake", "block_size": B,
+                                                "stats": {}})])
+        if op == P.OP_GET_STREAM:
+            conn.sendall(_mux_frame(rid, P.KIND_CHUNK,
+                                    P.encode_stream_chunk(0, 0, blocks[:1])))
+            return None  # die mid-stream
+        if op == P.OP_PING:
+            return None  # stay "down" for refresh_nodes
+        return _mux_frame(rid, P.KIND_RESPONSE, [P.encode_error("unsupported")])
+
+    fake = _FakeNode(dying_handler)
+    healthy = CacheNodeServer(MemoryOnlyStore(1 << 24, block_size=B), io_threads=1).start()
+    try:
+        cluster = ClusterKVBlockStore(
+            [fake.address, healthy.address], replication=2, block_size=B,
+            retries=0, connect_timeout_s=2.0,
+        )
+        # find tokens whose primary is the fake node
+        toks = None
+        for _ in range(200):
+            cand = _seq(rng, n_blocks)
+            if cluster.replicas_for(cand)[0] == 0:
+                toks = cand
+                break
+        assert toks is not None
+        healthy.backend.put_batch(toks, blocks)  # replica holds the data
+
+        stream = cluster.get_batch_stream(toks, n_blocks * B)
+        got = list(stream)
+        assert len(got) == n_blocks
+        assert all(np.array_equal(a, b) for a, b in zip(got, blocks))
+        assert stream.failovers == 1
+        assert stream.first_block_s is not None
+        assert cluster.cluster_stats.failovers >= 1
+        assert 0 in cluster.down_nodes  # the dead primary was marked down
+        cluster.close()
+    finally:
+        healthy.close()
+        fake.close()
+
+
+def test_partial_stream_commits_only_the_arrived_prefix():
+    """Hierarchy-level guarantee: when every replica dies mid-stream, the
+    fetch truncates and fulfill installs exactly the blocks that arrived
+    — a partial batch is a shorter hit, never a hole or a phantom."""
+
+    class _DyingStreamStore:
+        """Single 'node' whose stream always dies after 2 blocks."""
+
+        block_size = B
+
+        def __init__(self, blocks):
+            self._blocks = blocks
+
+        def probe(self, tokens):
+            return len(self._blocks) * B  # promises all 4
+
+        def get_batch_stream(self, tokens, n_tokens):
+            def gen():
+                yield self._blocks[0]
+                yield self._blocks[1]
+                raise NodeUnavailable("replicas exhausted")
+
+            return gen()
+
+        def get_batch(self, tokens, n_tokens):  # pragma: no cover - not used
+            raise AssertionError("streaming path must be taken")
+
+        def put_batch(self, tokens, blocks, start_block=0, skip_existing=True):
+            return 0
+
+    rng = np.random.default_rng(4)
+    blocks = _blocks(rng, 4)
+    h = CacheHierarchy(B, device_budget_blocks=16, host_budget_blocks=16,
+                       store=_DyingStreamStore(blocks))
+    toks = _seq(rng, 4)
+    plan = h.plan(toks)
+    fetched = h.fetch(plan)
+    assert fetched.first_block_s is not None  # block 0 arrived at fetch time
+    acq = h.fulfill(plan, fetched)
+    assert acq.reuse_tokens == 2 * B  # exactly the arrived prefix
+    assert acq.disk_tokens == 2 * B
+    assert all(n.data is not None for n in acq.nodes)
+    assert h.stats.streamed_fetches == 1
+    h.release(acq)
+
+
+# ======================================================== zero-copy serving
+def test_sendfile_stream_matches_buffered_stream(tmp_path):
+    """The sendfile fast path must be invisible to the client: bytes off
+    the zero-copy stream equal the buffered re-encode path's, and the
+    server accounts the raw extents it shipped."""
+    rng = np.random.default_rng(5)
+    toks = _seq(rng, 4)
+    blocks = _blocks(rng, 4)
+
+    def fill(root):
+        # raw codec: byte-exact round trips (int8 would be lossy) and
+        # contiguous vlog records for the extent path
+        from repro.core.codec import CODEC_RAW, BatchCodec
+
+        store = KVBlockStore(root, block_size=B, buffer_bytes=256,
+                             codec=BatchCodec(CODEC_RAW, use_zlib=False))
+        store.put_batch(toks, blocks)
+        store.flush()
+        return store
+
+    with CacheNodeServer(fill(str(tmp_path / "zc")), io_threads=1,
+                         zero_copy=True) as zc_srv, CacheNodeServer(
+        fill(str(tmp_path / "buf")), io_threads=1, zero_copy=False
+    ) as buf_srv:
+        zc = RemoteKVBlockStore(zc_srv.address, retries=0)
+        buf = RemoteKVBlockStore(buf_srv.address, retries=0)
+        got_zc = list(zc.get_batch_stream(toks, 4 * B))
+        got_buf = list(buf.get_batch_stream(toks, 4 * B))
+        assert len(got_zc) == len(got_buf) == 4
+        for a, b, want in zip(got_zc, got_buf, blocks):
+            assert np.array_equal(a, want) and a.dtype == want.dtype
+            assert np.array_equal(b, want)
+        assert zc_srv.stats.sendfile_bytes > 0
+        assert zc_srv.stats.raw_extents > 0
+        assert buf_srv.stats.sendfile_bytes == 0
+        zc.close()
+        buf.close()
