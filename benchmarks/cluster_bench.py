@@ -43,6 +43,7 @@ import argparse
 import os
 import shutil
 import tempfile
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -323,6 +324,8 @@ def serving_sweep(
                 "put_blocks_per_s": total_blocks / put_s,
                 "time_to_first_block_s": float(np.median(ttfb)) if ttfb else None,
                 "full_batch_get_s": float(np.median(full)) if full else None,
+                "ttfb_percentiles": common.percentiles(ttfb),
+                "full_batch_percentiles": common.percentiles(full),
                 "streamed_sequences": len(full_idx),
                 "cpu_utilization": util,
                 "rpcs": sum(r["rpcs"] for r in rep["rpc"].values()),
@@ -392,6 +395,99 @@ def failover_check(
     return out
 
 
+# ------------------------------------------------------------ observability
+def observability_check(
+    n_nodes: int = 4,
+    n_seqs: int = 16,
+    blocks_per_seq: int = 8,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 512,
+    verbose: bool = True,
+) -> Dict:
+    """Scrape a *live* cluster mid-load: ``n_nodes`` real node processes
+    serve a traced ``get_many`` loop from a background thread while the
+    main thread issues ``scrape_cluster()`` (OP_METRICS fan-out).  The
+    acceptance claim this encodes: a mid-benchmark scrape returns, for
+    every node, request counters, backend gauges, and latency histograms
+    with p50/p95/p99 — including at least one trace-derived server-side
+    span metric — without perturbing or blocking the load."""
+    from repro.obs.tracing import TraceContext, activate
+
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token, seed=23)
+    n_tokens = blocks_per_seq * block_tokens
+    get_items = [(s, n_tokens) for s in seqs]
+    cl = _LocalCluster(n_nodes, block_tokens)
+    try:
+        cl.store.put_many([(s, bs, 0) for s, bs in zip(seqs, blocks)])
+        cl.store.flush()
+        stop = threading.Event()
+        loops = [0]
+
+        def load():
+            # every iteration is one traced request: the trace id rides the
+            # mux frames to every node the fan-out touches
+            while not stop.is_set():
+                with activate(TraceContext()):
+                    cl.store.get_many(get_items)
+                loops[0] += 1
+
+        t = threading.Thread(target=load, daemon=True)
+        t.start()
+        deadline = time.time() + 10.0
+        while loops[0] < 2 and time.time() < deadline:
+            time.sleep(0.02)
+        t0 = time.perf_counter()
+        scrape = cl.store.scrape_cluster()  # mid-load: the loop keeps running
+        scrape_s = time.perf_counter() - t0
+        stop.set()
+        t.join(timeout=30)
+
+        per_node = {}
+        for idx, rep in scrape["nodes"].items():
+            assert not rep.get("unreachable"), f"node {idx} unreachable mid-bench"
+            m = rep["metrics"]
+            hreq = m["histograms"]["repro_node_request_seconds"]
+            hspan = m["histograms"]["repro_node_trace_server_span_seconds"]
+            # streamed reads served straight from the tensor log count as
+            # raw_get_blocks (sendfile path), not get_blocks — either way
+            # the node served blocks
+            served_blocks = (m["gauges"]["repro_store_get_blocks"]
+                             + m["gauges"].get("repro_store_raw_get_blocks", 0.0))
+            assert m["gauges"]["repro_server_requests"] > 0
+            assert served_blocks > 0
+            assert hreq["count"] > 0 and hreq["p99"] >= hreq["p50"] >= 0.0
+            assert m["counters"]["repro_node_trace_requests_total"] > 0
+            assert hspan["count"] > 0, "no trace-derived server-side span metric"
+            per_node[idx] = {
+                "requests": m["gauges"]["repro_server_requests"],
+                "get_blocks": served_blocks,
+                "request_p50_s": hreq["p50"],
+                "request_p95_s": hreq["p95"],
+                "request_p99_s": hreq["p99"],
+                "traced_requests": m["counters"]["repro_node_trace_requests_total"],
+                "trace_span_count": hspan["count"],
+            }
+        out = {
+            "nodes": n_nodes,
+            "load_loops": loops[0],
+            "scrape_s": scrape_s,
+            "live": scrape["live"],
+            "down": scrape["down"],
+            "per_node": per_node,
+            "traced_requests_total": sum(r["traced_requests"] for r in per_node.values()),
+            "trace_spans_total": sum(r["trace_span_count"] for r in per_node.values()),
+        }
+    finally:
+        cl.close()
+    if verbose:
+        print(f"  observability: scraped {n_nodes} live nodes in "
+              f"{1e3 * scrape_s:.1f}ms mid-load; "
+              f"{out['traced_requests_total']:.0f} traced requests, "
+              f"{out['trace_spans_total']:.0f} server-side spans recorded")
+    return out
+
+
 def run(quick: bool = False, verbose: bool = True) -> Dict:
     if verbose:
         print(" capacity scale-out (fixed per-node budget):")
@@ -409,7 +505,10 @@ def run(quick: bool = False, verbose: bool = True) -> Dict:
         verbose=verbose,
     )
     fo = failover_check(verbose=verbose)
-    out = {"capacity": cap, "serving": srv, "failover": fo}
+    if verbose:
+        print(" observability (mid-load OP_METRICS scrape of a live cluster):")
+    obs = observability_check(verbose=verbose)
+    out = {"capacity": cap, "serving": srv, "failover": fo, "observability": obs}
     common.save_artifact("cluster", out)
     return out
 

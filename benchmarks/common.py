@@ -171,6 +171,18 @@ def summarize(results: Dict[str, List[StageResult]]) -> Dict:
     return rows
 
 
+def percentiles(values, qs=(50, 95, 99)) -> Dict[str, float]:
+    """Shared latency-quantile convention for every benchmark: p50/p95/p99
+    by numpy's linear interpolation.  One helper so runtime_bench and
+    cluster_bench (and anything after them) report comparable tails
+    instead of each hand-rolling its own ``np.percentile`` call."""
+    vals = list(values)
+    if not vals:
+        return {f"p{q}": 0.0 for q in qs}
+    arr = np.asarray(vals, dtype=float)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
 def save_artifact(name: str, payload: Dict) -> str:
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, f"{name}.json")

@@ -113,6 +113,14 @@ def main(argv=None):
                 "pipelined_mean_io_wait_s": eng["pipelined"]["mean_io_wait_s"],
                 "hit_rate": eng["pipelined"]["hit_rate"],
                 "overlap_io_s": eng["overlap_io_s"],
+                "serial_ttft_percentiles": eng["serial"]["ttft_percentiles"],
+                "pipelined_ttft_percentiles": eng["pipelined"]["ttft_percentiles"],
+            },
+            "tracing_overhead": {
+                "overhead_pct": rt["tracing"]["overhead_pct"],
+                "min_ratio": rt["tracing"]["min_ratio"],
+                "threshold_pct": rt["tracing"]["threshold_pct"],
+                "pass": rt["tracing"]["pass"],
             },
         }
         root_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -120,7 +128,14 @@ def main(argv=None):
             json.dump(bench, f, indent=1)
         print(f"wrote BENCH_runtime.json (fan-out 4T "
               f"{fan['threads'].get(4, fan['threads'].get('4', {})).get('speedup_vs_serial_loop', 0):.2f}x, "
-              f"pipelined TTFT {-100 * eng['ttft_improvement']:+.1f}%)")
+              f"pipelined TTFT {-100 * eng['ttft_improvement']:+.1f}%, "
+              f"tracing overhead {rt['tracing']['overhead_pct']:+.2f}%)")
+        if not rt["tracing"]["pass"]:
+            # artifact is on disk for diagnosis; the run itself must fail
+            raise SystemExit(
+                "tracing hot-path overhead exceeds "
+                f"{rt['tracing']['threshold_pct']:.0f}% "
+                f"({rt['tracing']['overhead_pct']:+.2f}%)")
 
     if "cluster" not in skip:
         print("\n[9/9] cluster (PR 5: socket-served cache nodes, scale-out) ...")
@@ -156,6 +171,8 @@ def main(argv=None):
                         "get_speedup": row["get_speedup"],
                         "time_to_first_block_s": row["time_to_first_block_s"],
                         "full_batch_get_s": row["full_batch_get_s"],
+                        "ttfb_percentiles": row["ttfb_percentiles"],
+                        "full_batch_percentiles": row["full_batch_percentiles"],
                         "cpu_utilization": row["cpu_utilization"],
                     }
                     for n, row in srv["nodes"].items()
@@ -165,6 +182,12 @@ def main(argv=None):
                 "replication": fo["replication"],
                 "committed_blocks": fo["committed_blocks"],
                 "lost_committed_blocks": fo["lost_committed_blocks"],
+            },
+            "observability": {
+                "nodes": cb["observability"]["nodes"],
+                "scrape_s": cb["observability"]["scrape_s"],
+                "traced_requests_total": cb["observability"]["traced_requests_total"],
+                "trace_spans_total": cb["observability"]["trace_spans_total"],
             },
         }
         root_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

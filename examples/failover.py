@@ -7,11 +7,19 @@ the node rejoins on the same address and the ring rebalances back.
 The engine and hierarchy never learn any of this happened: the cluster
 store is just another ``StorageBackend``.
 
+The per-node numbers printed at the end come from the observability
+layer: ``cluster.scrape_cluster()`` fans ``OP_METRICS`` out to every
+node and returns each node's full metrics snapshot (counters, gauges,
+latency histograms).  The same scrape is exercised *while the victim is
+down* — a dead node must come back as ``unreachable`` immediately, not
+hang the scrape.
+
     PYTHONPATH=src python examples/failover.py
 """
 
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
@@ -31,7 +39,7 @@ def make_engine(cluster: ClusterKVBlockStore) -> ServingEngine:
     h = CacheHierarchy(BLOCK, device_budget_blocks=64, host_budget_blocks=128,
                        store=cluster)
     return ServingEngine(h, ComputeModel(get_config("glm4-9b")),
-                         kv_bytes_per_token=512)
+                         kv_bytes_per_token=512, tracing=True)
 
 
 def hit(recs) -> float:
@@ -90,6 +98,20 @@ def main():
     assert lost == 0, "replication=2 must survive a single node kill"
     assert hit(recs2) >= 0.5, "degraded cluster must keep serving cached prefixes"
 
+    # scraping a cluster with a dead member must return immediately with
+    # the victim flagged unreachable — never hang on the corpse
+    t0 = time.perf_counter()
+    degraded = cluster.scrape_cluster()
+    scrape_s = time.perf_counter() - t0
+    assert degraded["nodes"][victim].get("unreachable"), \
+        "dead node must be reported unreachable in the scrape"
+    assert all(not degraded["nodes"][i].get("unreachable")
+               for i in range(N_NODES) if i != victim)
+    assert scrape_s < 5.0, f"scrape must not hang on a dead node ({scrape_s:.1f}s)"
+    print(f"[phase 2] mid-outage scrape in {1e3 * scrape_s:.1f}ms: "
+          f"node {victim} unreachable, "
+          f"{len(degraded['live'])} live nodes still reporting")
+
     # --- phase 3: rejoin on the same address; ring rebalances -------------
     host, port = nodes[victim].address
     shutil.rmtree(nodes[victim].root, ignore_errors=True)  # cold restart
@@ -111,16 +133,34 @@ def main():
           f"(cold rejoined replica is backstopped by best-of-replica reads)")
     assert still_lost == 0
 
-    report = cluster.report()
-    print(f"[report] cluster: {report['cluster']}, "
-          f"rpcs={sum(r['rpcs'] for r in report['rpc'].values())}, "
-          f"chunks={sum(r['stream_chunks'] for r in report['rpc'].values())}")
-    for i, nd in sorted(report["nodes"].items()):
-        print(f"[report] node {i} ({nd['name']}): "
-              f"disk={nd['disk_bytes'] or 0} B in {nd['file_count']} files, "
-              f"get_blocks={nd['get_blocks']}, put_blocks={nd['put_blocks']}, "
-              f"streams={nd['streams']}, chunks={nd['stream_chunks']}, "
-              f"sendfile={nd['sendfile_bytes'] or 0} B")
+    # --- final STATS: one scrape of the healed cluster --------------------
+    scrape = cluster.scrape_cluster()
+    assert scrape["down"] == [], "healed cluster must scrape clean"
+    cg = scrape["cluster"]["gauges"]
+    print(f"[metrics] cluster: rpcs={cg.get('repro_rpc_rpcs', 0):.0f}, "
+          f"chunks={cg.get('repro_rpc_stream_chunks', 0):.0f}, "
+          f"failovers={cg.get('repro_cluster_failovers', 0):.0f}, "
+          f"live={cg.get('repro_cluster_live', 0):.0f}/"
+          f"{cg.get('repro_cluster_nodes', 0):.0f}")
+    traced_total = 0
+    for i, nd in sorted(scrape["nodes"].items()):
+        m = nd["metrics"]
+        g = m["gauges"]
+        hreq = m["histograms"]["repro_node_request_seconds"]
+        traced = m["counters"].get("repro_node_trace_requests_total", 0)
+        traced_total += traced
+        print(f"[metrics] node {i} ({nd['name']}): "
+              f"requests={g['repro_server_requests']:.0f}, "
+              f"get_blocks={g['repro_store_get_blocks'] + g.get('repro_store_raw_get_blocks', 0):.0f}, "
+              f"put_blocks={g['repro_store_put_blocks']:.0f}, "
+              f"disk={g.get('repro_node_disk_bytes', 0):.0f} B "
+              f"in {g.get('repro_node_file_count', 0):.0f} files, "
+              f"req p50/p99={1e3 * hreq['p50']:.2f}/{1e3 * hreq['p99']:.2f} ms, "
+              f"traced={traced:.0f}")
+        assert g["repro_server_requests"] > 0 and hreq["count"] > 0
+    # the engine ran with tracing on: its trace ids crossed the wire and
+    # were closed out server-side on the nodes
+    assert traced_total > 0, "engine-issued traces must reach the nodes"
     cluster.close()
     for n in nodes:
         n.close()

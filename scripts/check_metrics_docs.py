@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""Check that docs/OBSERVABILITY.md documents every metric the code can
+emit.
+
+The source of truth is ``repro.obs.catalog`` — metric names derived from
+the same dataclass introspection and name families the runtime registers
+(``dataclass_gauges`` bridges, per-op and per-span histogram families).
+Any name in the catalog that never appears in the doc fails the lint, so
+adding a metric without documenting it breaks docs CI.
+
+    PYTHONPATH=src python scripts/check_metrics_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC = os.path.join(ROOT, "docs", "OBSERVABILITY.md")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.obs.catalog import all_names
+
+    try:
+        with open(DOC) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"cannot read {DOC}: {e}")
+        return 1
+
+    missing = [name for name in all_names() if name not in text]
+    if missing:
+        print(f"{len(missing)} registered metric(s) missing from "
+              f"docs/OBSERVABILITY.md:")
+        for name in missing:
+            print(f"  {name}")
+        return 1
+    print(f"ok — all {len(all_names())} catalog metrics documented in "
+          f"docs/OBSERVABILITY.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.backend import StorageBackend
+from ..obs.tracing import maybe_span
 from ..runtime.writebehind import CommitQueue
 from .radix import (
     TIER_DEVICE,
@@ -267,15 +268,16 @@ class CacheHierarchy:
     def plan(self, tokens: Sequence[int]) -> AcquirePlan:
         """Phase 1 (engine thread): radix match; decide what disk I/O the
         fetch phase should issue.  Does not lock or mutate tier state."""
-        B = self.block_size
-        chain = self.tree.match_prefix(tokens)
-        disk_depth = max((n.depth for n in chain if n.tier == TIER_DISK), default=0)
-        return AcquirePlan(
-            tokens=list(tokens),
-            chain_blocks=len(chain),
-            disk_chain_depth=disk_depth,
-            total_blocks=len(tokens) // B,
-        )
+        with maybe_span("plan"):
+            B = self.block_size
+            chain = self.tree.match_prefix(tokens)
+            disk_depth = max((n.depth for n in chain if n.tier == TIER_DISK), default=0)
+            return AcquirePlan(
+                tokens=list(tokens),
+                chain_blocks=len(chain),
+                disk_chain_depth=disk_depth,
+                total_blocks=len(tokens) // B,
+            )
 
     def fetch(self, plan: AcquirePlan) -> DiskFetch:
         """Phase 2 (any thread): backend probe + one batched get covering
@@ -289,6 +291,10 @@ class CacheHierarchy:
         ``first_block_s`` records the time-to-first-block the serving
         layer reports.  ``io_s`` then covers only the streamed prefix —
         the drain happens under ``fulfill``'s own clock."""
+        with maybe_span("fetch"):
+            return self._fetch(plan)
+
+    def _fetch(self, plan: AcquirePlan) -> DiskFetch:
         if self.store is None or not plan.need_disk:
             return DiskFetch()
         B = self.block_size
@@ -324,6 +330,10 @@ class CacheHierarchy:
         landed between plan and fulfill are honored, and fetched blocks are
         only used where they still extend the (fresh) chain.  The returned
         node path is locked until ``release``."""
+        with maybe_span("fulfill"):
+            return self._fulfill(plan, fetched)
+
+    def _fulfill(self, plan: AcquirePlan, fetched: Optional[DiskFetch] = None) -> Acquisition:
         B = self.block_size
         tokens = plan.tokens
         fetched = fetched or DiskFetch()

@@ -63,6 +63,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.store import StoreStats
+from ..obs.tracing import current_trace
 from . import protocol as P
 from .mux import MuxConnection, MuxLoop, _StreamWaiter, _UnaryWaiter
 from .server import Address
@@ -223,8 +224,10 @@ class RemoteKVBlockStore:
         conn = self._conn()
         waiter = _UnaryWaiter()
         rid = conn.attach(waiter)
+        tr = current_trace()
         try:
-            sent = conn.send_request(rid, request)
+            sent = conn.send_request(rid, request,
+                                     trace=tr.id_bytes() if tr else None)
             payload = waiter.wait(self.timeout_s)
         finally:
             conn.detach(rid)  # never leak a waiter, success or not
@@ -282,8 +285,10 @@ class RemoteKVBlockStore:
                 conn = self._conn()
                 waiter = _StreamWaiter()
                 rid = conn.attach(waiter)
+                tr = current_trace()
                 try:
-                    sent = conn.send_request(rid, request)
+                    sent = conn.send_request(rid, request,
+                                             trace=tr.id_bytes() if tr else None)
                     with self._lock:
                         self.rpc_stats.streams += 1
                         self.rpc_stats.bytes_sent += sent
@@ -429,6 +434,12 @@ class RemoteKVBlockStore:
         report = self._rpc(P.OP_STATS)
         report["client"] = self.rpc_stats.as_dict()
         return report
+
+    def metrics(self) -> dict:
+        """The node's full metrics-registry snapshot (``OP_METRICS``):
+        counters, gauges, latency histograms with p50/p95/p99, and the
+        recent trace ids the node closed out."""
+        return self._rpc(P.OP_METRICS)
 
     @property
     def stats(self) -> StoreStats:

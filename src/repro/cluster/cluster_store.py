@@ -47,6 +47,7 @@ import numpy as np
 
 from ..core.backend import merge_stats
 from ..core.store import StoreStats
+from ..obs import MetricsRegistry, dataclass_gauges
 from ..runtime.executor import IOExecutor
 from .client import NodeUnavailable, RemoteKVBlockStore
 from .mux import MuxLoop
@@ -131,6 +132,27 @@ class ClusterKVBlockStore:
             self._owns_executor = True
         else:
             self._executor, self._owns_executor = None, False
+        # client-side registry: cluster routing counters plus the summed
+        # per-node transport view; node-side metrics ride scrape_cluster()
+        self.registry = MetricsRegistry()
+        self.registry.register_collector(
+            dataclass_gauges("repro_cluster", self.cluster_stats, lock=self._lock,
+                             extra=lambda: {
+                                 "repro_cluster_nodes": float(len(self.nodes)),
+                                 "repro_cluster_live": float(len(self.live_nodes)),
+                                 "repro_cluster_replication": float(self.replication),
+                             }))
+        self.registry.register_collector(self._rpc_gauges)
+
+    def _rpc_gauges(self) -> Dict[str, float]:
+        """Collector: every client's transport stats summed as
+        ``repro_rpc_*`` gauges (per-node splits come from the scrape)."""
+        out: Dict[str, float] = {}
+        for c in self.nodes:
+            for k, v in vars(c.rpc_stats).items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    out[f"repro_rpc_{k}"] = out.get(f"repro_rpc_{k}", 0.0) + float(v)
+        return out
 
     # -------------------------------------------------------------- routing
     def _live_pref(self, tokens: Sequence[int], read: bool = False) -> List[int]:
@@ -489,6 +511,35 @@ class ClusterKVBlockStore:
                 }
             rep["nodes"] = nodes
         return rep
+
+    def scrape_cluster(self) -> dict:
+        """One aggregated metrics scrape of the whole cluster.
+
+        Every node contributes its full ``OP_METRICS`` snapshot
+        (counters, gauges, latency histograms, recent traces).  A node
+        that cannot be reached is *reported*, never waited on past the
+        client timeout: already-down nodes are skipped without an RPC,
+        and a node that fails mid-scrape is marked down and recorded as
+        ``{"unreachable": True, "error": ...}`` — the scrape itself
+        always succeeds.  The client-side view (routing + transport
+        registry) rides along under ``"cluster"``."""
+        nodes: Dict[int, dict] = {}
+        down = set(self.down_nodes)
+        for i, client in enumerate(self.nodes):
+            if i in down:
+                nodes[i] = {"unreachable": True, "error": "marked down"}
+                continue
+            try:
+                nodes[i] = client.metrics()
+            except NodeUnavailable as e:
+                self.mark_down(i)
+                nodes[i] = {"unreachable": True, "error": str(e)}
+        return {
+            "nodes": nodes,
+            "live": self.live_nodes,
+            "down": self.down_nodes,
+            "cluster": self.registry.snapshot(),
+        }
 
 
 class ClusterBlockStream:

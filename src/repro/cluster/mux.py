@@ -140,10 +140,12 @@ class MuxConnection:
         with self._plock:
             self._pending.pop(rid, None)
 
-    def send_request(self, rid: int, request: bytes) -> int:
-        """Write one tagged REQUEST frame; returns bytes sent.  A send
+    def send_request(self, rid: int, request: bytes,
+                     trace: Optional[bytes] = None) -> int:
+        """Write one tagged REQUEST frame; returns bytes sent.  ``trace``
+        rides as the optional trace-id field of the mux header.  A send
         failure poisons the connection (the stream position is unknown)."""
-        parts = [P.pack_mux(rid, P.KIND_REQUEST), request]
+        parts = [P.pack_mux(rid, P.KIND_REQUEST, trace), request]
         try:
             with self._wlock:
                 return P.send_frame_parts(self.sock, parts)

@@ -72,6 +72,10 @@ def main(argv=None) -> int:
                     help="sharded backend's internal fan-out threads")
     ap.add_argument("--no-zero-copy", action="store_true",
                     help="disable the sendfile streaming path (A/B measurement)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus text exposition of the node's "
+                         "metrics registry on this HTTP port (0 = ephemeral, "
+                         "-1 = disabled)")
     args = ap.parse_args(argv)
 
     backend = make_backend(args)
@@ -79,6 +83,14 @@ def main(argv=None) -> int:
         backend, host=args.host, port=args.port, unix_path=args.unix_path,
         io_threads=args.io_threads, zero_copy=not args.no_zero_copy,
     ).start()
+    httpd = None
+    if args.metrics_port >= 0:
+        from ..obs.httpd import MetricsHTTPServer
+        httpd = MetricsHTTPServer(server.registry, host=args.host,
+                                  port=args.metrics_port)
+        # printed before READY so spawn_local_node picks it up while
+        # scanning for the READY line
+        print(f"METRICS port={httpd.port}", flush=True)
     if isinstance(server.address, str):
         print(f"READY unix={server.address}", flush=True)
     else:
@@ -88,6 +100,8 @@ def main(argv=None) -> int:
     for sig in (signal.SIGTERM, signal.SIGINT):
         signal.signal(sig, lambda *_: stop.set())
     stop.wait()
+    if httpd is not None:
+        httpd.close()
     server.close()
     backend.flush()
     backend.close()
@@ -98,10 +112,12 @@ def main(argv=None) -> int:
 class NodeProcess:
     """Handle on one spawned local node: address + process control."""
 
-    def __init__(self, proc: subprocess.Popen, address, root: str):
+    def __init__(self, proc: subprocess.Popen, address, root: str,
+                 metrics_port: Optional[int] = None):
         self.proc = proc
         self.address = address
         self.root = root
+        self.metrics_port = metrics_port  # HTTP exposition port, if enabled
 
     @property
     def alive(self) -> bool:
@@ -138,10 +154,13 @@ def spawn_local_node(
     budget_bytes: int = 0,
     vlog_file_bytes: int = 0,
     ready_timeout_s: float = 30.0,
+    metrics_port: Optional[int] = None,
     extra_args: Optional[List[str]] = None,
 ) -> NodeProcess:
     """Start ``python -m repro.cluster.node`` as a child process and block
-    until its socket is bound (the ``READY`` line)."""
+    until its socket is bound (the ``READY`` line).  ``metrics_port``
+    enables the HTTP exposition endpoint (0 = ephemeral; the bound port
+    comes back on the handle's ``metrics_port``)."""
     src_dir = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     env = dict(os.environ)
     env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
@@ -153,27 +172,47 @@ def spawn_local_node(
         "--budget-bytes", str(budget_bytes),
         "--vlog-file-bytes", str(vlog_file_bytes),
     ] + (extra_args or [])
+    if metrics_port is not None:
+        cmd += ["--metrics-port", str(metrics_port)]
     proc = subprocess.Popen(
         cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
     )
     deadline = time.time() + ready_timeout_s
-    line = ""
-    while time.time() < deadline:
+    bound_metrics: Optional[int] = None
+    address = None
+    # Read the raw fd and split lines by hand: select() + buffered
+    # readline() race when the child prints METRICS and READY
+    # back-to-back — one readline() can pull both lines into the
+    # userspace buffer and return only the first, after which select()
+    # on the drained OS pipe never fires again.
+    fd = proc.stdout.fileno()
+    pending = b""
+    last = ""
+    while time.time() < deadline and address is None:
         if proc.poll() is not None:
-            out = proc.stdout.read() if proc.stdout else ""
+            out = pending.decode(errors="replace") + (proc.stdout.read() or "")
             raise RuntimeError(f"node exited at startup (rc={proc.returncode}): {out}")
-        ready, _, _ = select.select([proc.stdout], [], [], 0.25)
-        if ready:
-            line = proc.stdout.readline()
-            if line.startswith("READY"):
+        readable, _, _ = select.select([fd], [], [], 0.25)
+        if not readable:
+            continue
+        chunk = os.read(fd, 4096)
+        if not chunk:
+            continue  # EOF: let proc.poll() report the exit
+        pending += chunk
+        while b"\n" in pending:
+            raw, _, pending = pending.partition(b"\n")
+            last = raw.decode(errors="replace")
+            if last.startswith("METRICS"):  # printed before READY
+                bound_metrics = int(last.split("METRICS", 1)[1].strip().partition("=")[2])
+            elif last.startswith("READY"):
+                token = last.split("READY", 1)[1].strip()
+                key, _, value = token.partition("=")
+                address = value if key == "unix" else (host, int(value))
                 break
-    else:
+    if address is None:
         proc.kill()
-        raise TimeoutError(f"node gave no READY within {ready_timeout_s}s: {line!r}")
-    token = line.split("READY", 1)[1].strip()
-    key, _, value = token.partition("=")
-    address = value if key == "unix" else (host, int(value))
-    return NodeProcess(proc, address, root)
+        raise TimeoutError(f"node gave no READY within {ready_timeout_s}s: {last!r}")
+    return NodeProcess(proc, address, root, metrics_port=bound_metrics)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,9 @@ every frame carries a client-chosen request id, so responses may return
 in any order and a streaming response interleaves with other traffic:
 
     frame    :=  u32 payload_len (big-endian) | payload
-    payload  :=  u32 request_id | u8 kind | body
+    payload  :=  u32 request_id | u8 kind | [u64 trace_id] | body
     kind     :=  0 REQUEST | 1 RESPONSE | 2 CHUNK | 3 END
+                 (high bit FLAG_TRACE: an 8-byte trace id precedes body)
 
     REQUEST  body :=  u8 opcode | args
     RESPONSE body :=  u8 status | result     status 0 = ok, 1 = error
@@ -97,6 +98,7 @@ OP_MAINTENANCE = 9
 OP_FLUSH = 10
 OP_GET_STREAM = 11
 OP_GET_MANY_STREAM = 12
+OP_METRICS = 13
 
 OP_NAMES = {
     OP_PING: "ping",
@@ -111,6 +113,7 @@ OP_NAMES = {
     OP_FLUSH: "flush",
     OP_GET_STREAM: "get_stream",
     OP_GET_MANY_STREAM: "get_many_stream",
+    OP_METRICS: "metrics",
 }
 
 STREAM_OPS = (OP_GET_STREAM, OP_GET_MANY_STREAM)
@@ -126,6 +129,13 @@ KIND_END = 3
 
 _MUX = struct.Struct(">IB")
 MUX_HDR_BYTES = _MUX.size  # 5: u32 request_id | u8 kind
+
+# Optional trace field: when the high bit of the kind byte is set, an
+# 8-byte trace id follows the mux header before the body.  Old peers
+# never set the flag, so the base frame layout is unchanged; REQUEST
+# frames carry it client->server, the server never echoes it back.
+FLAG_TRACE = 0x80
+TRACE_ID_BYTES = 8
 
 
 class ProtocolError(Exception):
@@ -145,18 +155,40 @@ class RemoteError(Exception):
 
 
 # ----------------------------------------------------------------- framing
-def pack_mux(request_id: int, kind: int) -> bytes:
-    return _MUX.pack(request_id & 0xFFFFFFFF, kind)
+def pack_mux(request_id: int, kind: int, trace: Optional[bytes] = None) -> bytes:
+    """Mux header; ``trace`` (exactly ``TRACE_ID_BYTES``) appends the
+    optional trace-id field and sets ``FLAG_TRACE`` on the kind byte."""
+    if trace is None:
+        return _MUX.pack(request_id & 0xFFFFFFFF, kind)
+    if len(trace) != TRACE_ID_BYTES:
+        raise ProtocolError(f"trace id must be {TRACE_ID_BYTES} bytes, got {len(trace)}")
+    return _MUX.pack(request_id & 0xFFFFFFFF, kind | FLAG_TRACE) + bytes(trace)
+
+
+def split_mux_ex(payload) -> Tuple[int, int, Optional[bytes], memoryview]:
+    """``(request_id, kind, trace_id_or_None, body)`` — body is a
+    zero-copy view past the header and optional trace field."""
+    if len(payload) < MUX_HDR_BYTES:
+        raise ProtocolError(f"mux frame of {len(payload)} bytes has no header")
+    rid, kind_raw = _MUX.unpack_from(payload)
+    kind = kind_raw & ~FLAG_TRACE & 0xFF
+    if kind > KIND_END:
+        raise ProtocolError(f"unknown frame kind {kind}")
+    off = MUX_HDR_BYTES
+    trace = None
+    if kind_raw & FLAG_TRACE:
+        if len(payload) < off + TRACE_ID_BYTES:
+            raise ProtocolError("frame flags a trace id but is too short to hold one")
+        trace = bytes(memoryview(payload)[off : off + TRACE_ID_BYTES])
+        off += TRACE_ID_BYTES
+    return rid, kind, trace, memoryview(payload)[off:]
 
 
 def split_mux(payload) -> Tuple[int, int, memoryview]:
-    """``(request_id, kind, body)`` — body is a zero-copy view."""
-    if len(payload) < MUX_HDR_BYTES:
-        raise ProtocolError(f"mux frame of {len(payload)} bytes has no header")
-    rid, kind = _MUX.unpack_from(payload)
-    if kind > KIND_END:
-        raise ProtocolError(f"unknown frame kind {kind}")
-    return rid, kind, memoryview(payload)[MUX_HDR_BYTES:]
+    """``(request_id, kind, body)`` — body is a zero-copy view.  Any
+    trace field is parsed and dropped; use :func:`split_mux_ex` to see it."""
+    rid, kind, _trace, body = split_mux_ex(payload)
+    return rid, kind, body
 
 
 def send_frame(sock: socket.socket, payload: bytes) -> None:
@@ -351,12 +383,12 @@ def encode_request(op: int, *args) -> bytes:
     GET_MANY (items,)                 items = [(tokens, n_tokens), ...]
     PUT (tokens, blocks, start_block, skip_existing)
     PUT_MANY (items,)                 items = [(tokens, blocks, start), ...]
-    STATS () / MAINTENANCE (compact_steps,) / FLUSH ()
+    STATS () / METRICS () / MAINTENANCE (compact_steps,) / FLUSH ()
     GET_STREAM (tokens, n_tokens, chunk_blocks)
     GET_MANY_STREAM (items, chunk_blocks)
     """
     parts: List = [struct.pack(">B", op)]
-    if op in (OP_PING, OP_STATS, OP_FLUSH):
+    if op in (OP_PING, OP_STATS, OP_METRICS, OP_FLUSH):
         pass
     elif op == OP_PROBE:
         parts.append(_enc_tokens(args[0]))
@@ -400,7 +432,7 @@ def decode_request(payload: bytes) -> Tuple[int, tuple]:
         raise ProtocolError("empty request payload")
     r = _Reader(payload)
     op = r.u8()
-    if op in (OP_PING, OP_STATS, OP_FLUSH):
+    if op in (OP_PING, OP_STATS, OP_METRICS, OP_FLUSH):
         args: tuple = ()
     elif op == OP_PROBE:
         args = (_dec_tokens(r),)
@@ -453,7 +485,7 @@ def encode_ok(op: int, result) -> bytes:
         parts.append(_U32.pack(len(result)))
         for bs in result:
             parts.extend(_enc_blocks(bs))
-    elif op in (OP_STATS, OP_MAINTENANCE):
+    elif op in (OP_STATS, OP_METRICS, OP_MAINTENANCE):
         parts.append(json.dumps(result).encode("utf-8"))
     else:
         raise ProtocolError(f"unknown opcode {op}")
@@ -485,7 +517,7 @@ def decode_response(op: int, payload: bytes):
         result = _dec_blocks(r)
     elif op == OP_GET_MANY:
         result = [_dec_blocks(r) for _ in range(r.u32())]
-    elif op in (OP_STATS, OP_MAINTENANCE):
+    elif op in (OP_STATS, OP_METRICS, OP_MAINTENANCE):
         try:
             return json.loads(bytes(r.buf[r.pos :]).decode("utf-8"))
         except (UnicodeDecodeError, json.JSONDecodeError) as e:

@@ -51,10 +51,12 @@ import selectors
 import socket
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
 from ..core.store import StoreStats
+from ..obs import MetricsRegistry, dataclass_gauges
 from ..runtime.executor import IOExecutor
 from . import protocol as P
 
@@ -108,6 +110,7 @@ class CacheNodeServer:
         send_timeout_s: float = 30.0,
         zero_copy: bool = True,
         max_chunk_blocks: int = 1024,
+        registry: Optional[MetricsRegistry] = None,
     ):
         """``send_timeout_s`` bounds response writes: a client that stops
         reading (stalled, hostile) gets dropped instead of wedging an
@@ -122,6 +125,21 @@ class CacheNodeServer:
         self.zero_copy = bool(zero_copy) and hasattr(os, "sendfile")
         self.stats = ServerStats()
         self._stats_lock = threading.Lock()
+        # ---- observability: one registry per node, scraped via OP_METRICS
+        # (or the --metrics-port HTTP endpoint).  Server/backend stats are
+        # bridged in as collectors; request latencies land in histograms.
+        self.registry = registry or MetricsRegistry()
+        self.registry.register_collector(
+            dataclass_gauges("repro_server", self.stats, lock=self._stats_lock))
+        self.registry.register_collector(self._backend_gauges)
+        self._h_request = self.registry.histogram(
+            "repro_node_request_seconds", "server-side latency of every request")
+        self._h_trace_span = self.registry.histogram(
+            "repro_node_trace_server_span_seconds",
+            "server-side span of requests that carried a trace id")
+        self._c_trace_requests = self.registry.counter(
+            "repro_node_trace_requests_total", "requests that carried a trace id")
+        self._recent_traces: deque = deque(maxlen=16)  # hex ids, newest last
         if io_executor is not None:
             self._executor, self._owns_executor = io_executor, False
         else:
@@ -263,7 +281,7 @@ class CacheNodeServer:
             payload = bytes(conn.buf[4 : 4 + length])
             del conn.buf[: 4 + length]
             try:
-                rid, kind, body = P.split_mux(payload)
+                rid, kind, trace, body = P.split_mux_ex(payload)
             except P.ProtocolError:
                 with self._stats_lock:
                     self.stats.protocol_errors += 1
@@ -278,7 +296,7 @@ class CacheNodeServer:
                 )
                 self._drop(conn)
                 return
-            self._executor.submit(self._handle, conn, rid, bytes(body))
+            self._executor.submit(self._handle, conn, rid, bytes(body), trace)
 
     def _drop(self, conn: _Conn, unregister: bool = True) -> None:
         if not conn.alive:
@@ -315,8 +333,13 @@ class CacheNodeServer:
             pass
 
     # ------------------------------------------------------------ handling
-    def _handle(self, conn: _Conn, rid: int, request: bytes) -> None:
-        """Executor worker: decode, run the backend op, respond."""
+    def _handle(self, conn: _Conn, rid: int, request: bytes,
+                trace: Optional[bytes] = None) -> None:
+        """Executor worker: decode, run the backend op, respond.  The
+        op's wall time lands in the request/per-op histograms; if the
+        frame carried a trace id, the same interval closes the trace out
+        server-side (span histogram + recent-traces ring)."""
+        t0 = time.perf_counter()
         try:
             op, args = P.decode_request(request)
         except P.ProtocolError as e:
@@ -326,7 +349,7 @@ class CacheNodeServer:
             self._drop(conn)
             return
         if op in P.STREAM_OPS:
-            self._handle_stream(conn, rid, op, args)
+            self._handle_stream(conn, rid, op, args, trace=trace, t0=t0)
             return
         try:
             result = self._dispatch(op, args)
@@ -337,13 +360,27 @@ class CacheNodeServer:
             payload = P.encode_error(f"{type(e).__name__}: {e}")
         with self._stats_lock:
             self.stats.requests += 1
+        self._observe_op(op, time.perf_counter() - t0, trace)
         try:
             self._send(conn, rid, P.KIND_RESPONSE, [payload])
         except OSError:
             self._drop(conn)
 
+    def _observe_op(self, op: int, elapsed_s: float, trace: Optional[bytes]) -> None:
+        self._h_request.observe(elapsed_s)
+        self.registry.histogram(
+            f"repro_node_op_seconds_{P.OP_NAMES.get(op, op)}").observe(elapsed_s)
+        if trace is not None:
+            self._c_trace_requests.inc()
+            self._h_trace_span.observe(elapsed_s)
+            self._recent_traces.append(trace.hex())
+
     # ----------------------------------------------------------- streaming
-    def _handle_stream(self, conn: _Conn, rid: int, op: int, args: tuple) -> None:
+    def _handle_stream(self, conn: _Conn, rid: int, op: int, args: tuple,
+                       trace: Optional[bytes] = None,
+                       t0: Optional[float] = None) -> None:
+        if t0 is None:
+            t0 = time.perf_counter()
         if op == P.OP_GET_STREAM:
             tokens, n_tokens, chunk_blocks = args
             items = [(tokens, n_tokens)]
@@ -365,11 +402,13 @@ class CacheNodeServer:
         except Exception as e:  # noqa: BLE001 — abort the stream, report
             with self._stats_lock:
                 self.stats.errors += 1
+            self._observe_op(op, time.perf_counter() - t0, trace)
             try:
                 self._send(conn, rid, P.KIND_END, [P.encode_error(f"{type(e).__name__}: {e}")])
             except OSError:
                 self._drop(conn)
             return
+        self._observe_op(op, time.perf_counter() - t0, trace)
         try:
             self._send(conn, rid, P.KIND_END, [P.encode_stream_end(counts)])
         except OSError:
@@ -504,9 +543,54 @@ class CacheNodeServer:
                 "stats": fields,
                 "server": self.stats.as_dict(),
             }
+        if op == P.OP_METRICS:
+            return self.metrics_report()
         if op == P.OP_MAINTENANCE:
             return b.maintenance(args[0])
         if op == P.OP_FLUSH:
             b.flush()
             return None
         raise P.ProtocolError(f"unknown opcode {op}")
+
+    # ------------------------------------------------------- observability
+    def _backend_gauges(self) -> dict:
+        """Collector: backend store + LSM stats as ``repro_store_*`` /
+        ``repro_lsm_*`` gauges (summed across shards for sharded
+        backends), plus disk usage.  Tolerant of minimal backends."""
+        b = self.backend
+        out: dict = {}
+        st = getattr(b, "stats", None)
+        if st is not None:
+            for k, v in vars(st).items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    out[f"repro_store_{k}"] = float(v)
+        for attr, name in (("disk_bytes", "repro_node_disk_bytes"),
+                           ("file_count", "repro_node_file_count")):
+            try:
+                v = getattr(b, attr, None)
+            except OSError:
+                v = None
+            if isinstance(v, (int, float)):
+                out[name] = float(v)
+        stores = getattr(b, "shards", None) or [b]
+        lsm: dict = {}
+        for s in stores:
+            idx = getattr(s, "index", None)
+            lst = getattr(idx, "stats", None)
+            if lst is None:
+                continue
+            for k, v in vars(lst).items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    lsm[f"repro_lsm_{k}"] = lsm.get(f"repro_lsm_{k}", 0.0) + float(v)
+        out.update(lsm)
+        return out
+
+    def metrics_report(self) -> dict:
+        """Full registry snapshot plus node identity and the most recent
+        trace ids this node closed out — the ``OP_METRICS`` body."""
+        return {
+            "name": getattr(self.backend, "name", "?"),
+            "block_size": getattr(self.backend, "block_size", 0),
+            "metrics": self.registry.snapshot(),
+            "traces": list(self._recent_traces),
+        }

@@ -31,6 +31,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, TypeVar
 
+from ..obs.tracing import activate, current_trace
+
 T = TypeVar("T")
 
 
@@ -123,9 +125,16 @@ class IOExecutor:
             self.stats.submitted += 1
             self.stats.queue_depth_max = max(self.stats.queue_depth_max, self._in_flight)
 
+        # the submitter's trace follows the job across the thread hop, so
+        # spans recorded inside the worker land on the right request
+        trace = current_trace()
+
         def _run():
             try:
-                return fn(*args, **kwargs)
+                if trace is None:
+                    return fn(*args, **kwargs)
+                with activate(trace):
+                    return fn(*args, **kwargs)
             finally:
                 with self._slot_free:
                     self._in_flight -= 1
@@ -153,9 +162,14 @@ class IOExecutor:
             self.stats.submitted += 1
             self.stats.queue_depth_max = max(self.stats.queue_depth_max, self._in_flight)
 
+        trace = current_trace()
+
         def _run():
             try:
-                return fn(*args, **kwargs)
+                if trace is None:
+                    return fn(*args, **kwargs)
+                with activate(trace):
+                    return fn(*args, **kwargs)
             finally:
                 with self._slot_free:
                     self._in_flight -= 1

@@ -38,12 +38,15 @@ from collections import deque
 from concurrent.futures import FIRST_COMPLETED
 from concurrent.futures import TimeoutError as FutureTimeoutError
 from concurrent.futures import wait as futures_wait
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..cache.hierarchy import AcquirePlan, CacheHierarchy, DiskFetch
+from ..obs import MetricsRegistry, TraceContext, activate, dataclass_gauges
+from ..obs.tracing import maybe_span
 from ..runtime import RuntimeServices
 from .compute_model import ComputeModel
 
@@ -107,6 +110,7 @@ class _Staged:
     req: object
     plan: Optional[AcquirePlan]
     future: Optional[object] = None  # Future[DiskFetch] when prefetched
+    trace: Optional[TraceContext] = None  # per-request trace (tracing=True)
 
 
 class ServingEngine:
@@ -122,6 +126,8 @@ class ServingEngine:
         runtime: Optional[RuntimeServices] = None,
         pipeline: Optional[bool] = None,
         simulate_compute_wall: bool = False,
+        registry: Optional[MetricsRegistry] = None,
+        tracing: bool = False,
     ):
         """``simulate_compute_wall``: when compute is *modeled* (no
         ``real_prefill``), additionally occupy real wall-clock time for the
@@ -156,6 +162,36 @@ class ServingEngine:
         self._batches = 0
         self._ewma_read_s: float = 0.0
         self._block_template: Optional[np.ndarray] = None
+        self.tracing = bool(tracing)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Wire the engine, cache, and runtime stats into the registry so
+        one snapshot covers the whole serving stack.  Collectors read the
+        live dataclasses at snapshot time — no double bookkeeping."""
+        reg = self.registry
+        self._h_ttft = reg.histogram("repro_engine_ttft_seconds")
+        self._h_io_wait = reg.histogram("repro_engine_io_wait_seconds")
+        reg.register_collector(dataclass_gauges(
+            "repro_engine", self.stats,
+            extra=lambda: {
+                "repro_engine_mean_ttft_s": self.stats.mean_ttft,
+                "repro_engine_mean_ttfb_s": self.stats.mean_ttfb,
+                "repro_engine_mean_hit": self.stats.mean_hit,
+                "repro_engine_streamed_fetches": float(len(self.stats.ttfbs)),
+            }))
+        reg.register_collector(dataclass_gauges("repro_cache", self.h.stats))
+        if self.runtime is not None:
+            reg.register_collector(dataclass_gauges(
+                "repro_executor", self.runtime.executor.stats,
+                lock=self.runtime.executor._lock))
+            if self.runtime.commits is not None:
+                reg.register_collector(dataclass_gauges(
+                    "repro_commit_queue", self.runtime.commits.stats))
+        if self._maintenance is not None:
+            reg.register_collector(dataclass_gauges(
+                "repro_maintenance", self._maintenance.stats))
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, request) -> None:
@@ -196,23 +232,27 @@ class ServingEngine:
         staged = []
         ex = self.runtime.executor if self.runtime is not None else None
         for r in batch:
+            trace = TraceContext() if self.tracing else None
             if ex is None:
                 # no runtime: the legacy acquire path re-plans internally,
                 # so planning here would walk the radix tree twice
-                staged.append(_Staged(req=r, plan=None))
+                staged.append(_Staged(req=r, plan=None, trace=trace))
                 continue
-            plan = self.h.plan(r.tokens)
-            fut = None
-            # never stall the engine thread on the admission gate: if the
-            # pool is saturated, try_submit declines and the fetch runs at
-            # serve time in _resolve_fetch, when slots have freed.  (The
-            # old in_flight < max_pending check raced other submitters
-            # into exactly the stall it was written to avoid.)
-            if prefetch and plan.need_disk:
-                fut = ex.try_submit(self.h.fetch, plan)
-                if fut is not None:
-                    self.stats.prefetched_requests += 1
-            staged.append(_Staged(req=r, plan=plan, future=fut))
+            with activate(trace) if trace is not None else nullcontext():
+                plan = self.h.plan(r.tokens)
+                fut = None
+                # never stall the engine thread on the admission gate: if
+                # the pool is saturated, try_submit declines and the fetch
+                # runs at serve time in _resolve_fetch, when slots have
+                # freed.  (The old in_flight < max_pending check raced
+                # other submitters into exactly the stall it was written
+                # to avoid.)  try_submit captures the active trace, so the
+                # prefetch worker's spans land on this request.
+                if prefetch and plan.need_disk:
+                    fut = ex.try_submit(self.h.fetch, plan)
+                    if fut is not None:
+                        self.stats.prefetched_requests += 1
+            staged.append(_Staged(req=r, plan=plan, future=fut, trace=trace))
         return staged
 
     def step(self) -> List[RequestRecord]:
@@ -319,6 +359,19 @@ class ServingEngine:
         return fetched, wait_s, hedged
 
     def _serve_one(self, st: _Staged) -> RequestRecord:
+        with activate(st.trace) if st.trace is not None else nullcontext():
+            rec = self._serve(st)
+        self._h_ttft.observe(rec.ttft_s)
+        self._h_io_wait.observe(rec.io_wait_s)
+        if st.trace is not None:
+            # one histogram per span name: the engine-side closure of the
+            # trace, matching the node-side close-out in the server
+            for name, total in st.trace.span_totals().items():
+                self.registry.histogram(
+                    f"repro_engine_span_seconds_{name}").observe(total)
+        return rec
+
+    def _serve(self, st: _Staged) -> RequestRecord:
         req = st.req
         tokens = req.tokens
         B = self.h.block_size
@@ -343,21 +396,23 @@ class ServingEngine:
         reused = acq.reuse_tokens
         n_new = len(tokens) - reused
 
-        if self.real_prefill is not None:
-            new_blocks, compute_s = self.real_prefill(tokens, reused)
-        else:
-            compute_s = self.compute.prefill_s(n_new, context=reused)
-            n_blocks = (len(tokens) // B) - (reused // B)
-            # realistic payload entropy (zeros would compress to nothing and
-            # fake the storage pressure the paper's claims rest on)
-            if self._block_template is None:
-                shape = (B, max(1, self.kv_bytes_per_token // 2))
-                self._block_template = np.random.default_rng(0).standard_normal(shape).astype(np.float16)
-            new_blocks = [self._block_template] * n_blocks
-            if self.simulate_compute_wall and compute_s > 0:
-                time.sleep(compute_s)  # GIL released: prefetch runs under this
-        self.h.commit(tokens, new_blocks, acq)
-        self.h.release(acq)
+        with maybe_span("compute"):
+            if self.real_prefill is not None:
+                new_blocks, compute_s = self.real_prefill(tokens, reused)
+            else:
+                compute_s = self.compute.prefill_s(n_new, context=reused)
+                n_blocks = (len(tokens) // B) - (reused // B)
+                # realistic payload entropy (zeros would compress to nothing
+                # and fake the storage pressure the paper's claims rest on)
+                if self._block_template is None:
+                    shape = (B, max(1, self.kv_bytes_per_token // 2))
+                    self._block_template = np.random.default_rng(0).standard_normal(shape).astype(np.float16)
+                new_blocks = [self._block_template] * n_blocks
+                if self.simulate_compute_wall and compute_s > 0:
+                    time.sleep(compute_s)  # GIL released: prefetch runs under this
+        with maybe_span("commit"):
+            self.h.commit(tokens, new_blocks, acq)
+            self.h.release(acq)
 
         rec = RequestRecord(
             rid=getattr(req, "rid", -1),
@@ -380,25 +435,38 @@ class ServingEngine:
         return rec
 
     # ---------------------------------------------------------------- report
+    def metrics_snapshot(self) -> Dict:
+        """Full registry snapshot (counters / gauges / histograms) — the
+        engine-side twin of the node server's ``OP_METRICS`` reply."""
+        return self.registry.snapshot()
+
     def runtime_report(self) -> Dict:
         """Engine + runtime counters in one machine-readable dict (the
-        benchmark artifact format)."""
+        benchmark artifact format).  Scalar fields are read back out of
+        the metrics registry — the same snapshot the scrape endpoint
+        exports — so the report and the exposition can never disagree."""
+        snap = self.registry.snapshot()
+        g = snap["gauges"]
+        ttft = snap["histograms"]["repro_engine_ttft_seconds"]
         out: Dict = {
-            "completed": self.stats.completed,
-            "mean_ttft_s": self.stats.mean_ttft,
-            "mean_time_to_first_block_s": self.stats.mean_ttfb,
-            "streamed_fetches": len(self.stats.ttfbs),
-            "mean_hit": self.stats.mean_hit,
-            "hedged_reads": self.stats.hedged_reads,
-            "prefetched_requests": self.stats.prefetched_requests,
-            "prefetch_ready": self.stats.prefetch_ready,
-            "io_wait_s": self.stats.io_wait_s,
-            "overlap_io_s": self.stats.overlap_io_s,
-            "maintenance_runs": self.stats.maintenance_runs,
-            "maintenance_compactions": self.stats.maintenance_compactions,
-            "evicted_files": self.stats.evicted_files,
-            "plan_stale": self.h.stats.plan_stale,
-            "writeback_blocks": self.h.stats.writeback_blocks,
+            "completed": int(g.get("repro_engine_completed", 0)),
+            "mean_ttft_s": g.get("repro_engine_mean_ttft_s", 0.0),
+            "mean_time_to_first_block_s": g.get("repro_engine_mean_ttfb_s", 0.0),
+            "streamed_fetches": int(g.get("repro_engine_streamed_fetches", 0)),
+            "mean_hit": g.get("repro_engine_mean_hit", 0.0),
+            "hedged_reads": int(g.get("repro_engine_hedged_reads", 0)),
+            "prefetched_requests": int(g.get("repro_engine_prefetched_requests", 0)),
+            "prefetch_ready": int(g.get("repro_engine_prefetch_ready", 0)),
+            "io_wait_s": g.get("repro_engine_io_wait_s", 0.0),
+            "overlap_io_s": g.get("repro_engine_overlap_io_s", 0.0),
+            "maintenance_runs": int(g.get("repro_engine_maintenance_runs", 0)),
+            "maintenance_compactions": int(g.get("repro_engine_maintenance_compactions", 0)),
+            "evicted_files": int(g.get("repro_engine_evicted_files", 0)),
+            "plan_stale": int(g.get("repro_cache_plan_stale", 0)),
+            "writeback_blocks": int(g.get("repro_cache_writeback_blocks", 0)),
+            "ttft_p50_s": ttft["p50"],
+            "ttft_p95_s": ttft["p95"],
+            "ttft_p99_s": ttft["p99"],
         }
         if self.runtime is not None:
             out["runtime"] = self.runtime.report()

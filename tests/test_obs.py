@@ -1,0 +1,272 @@
+"""Observability layer: concurrent metric correctness, histogram bucket
+properties, exposition well-formedness, and cross-process trace
+propagation over a real spawned node."""
+
+import threading
+import urllib.request
+
+import pytest
+
+from repro.obs import (MetricsRegistry, TraceContext, activate,
+                       current_trace, maybe_span, render_prometheus)
+from repro.obs.metrics import Histogram
+from repro.obs.tracing import TRACE_ID_BYTES
+
+
+# ------------------------------------------------------------- concurrency
+def test_concurrent_counters_exact():
+    """8 threads hammer one counter, one gauge, and one histogram; totals
+    must be exact — a lost update is a data race in the striped locks."""
+    reg = MetricsRegistry()
+    n_threads, n_iter = 8, 2_000
+    c = reg.counter("repro_test_hits_total")
+    g = reg.gauge("repro_test_depth")
+    h = reg.histogram("repro_test_latency_seconds")
+    barrier = threading.Barrier(n_threads)
+
+    def hammer(tid: int):
+        barrier.wait()
+        for i in range(n_iter):
+            c.inc()
+            g.inc(2.0)
+            g.dec(1.0)
+            h.observe(1e-5 * (1 + (i + tid) % 7))
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    total = n_threads * n_iter
+    assert c.value == total
+    assert g.value == total  # +2 -1 per iteration
+    snap = h.snapshot()
+    assert snap["count"] == total
+    assert snap["buckets"][-1][1] == total  # +Inf bucket is cumulative total
+
+
+def test_concurrent_get_or_create_same_instrument():
+    """Racing get-or-create must converge on one instrument per name."""
+    reg = MetricsRegistry()
+    got = []
+    barrier = threading.Barrier(8)
+
+    def create():
+        barrier.wait()
+        got.append(reg.counter("repro_test_races_total"))
+
+    threads = [threading.Thread(target=create) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(c is got[0] for c in got)
+    got[0].inc()
+    assert reg.snapshot()["counters"]["repro_test_races_total"] == 1.0
+
+
+# -------------------------------------------------------------- histograms
+def test_histogram_bucket_boundaries():
+    """le semantics: a value exactly on a bound lands in that bound's
+    bucket; one ulp above goes to the next; above the top bound -> +Inf."""
+    h = Histogram("repro_test_h", start=1e-3, factor=2.0, buckets=4)
+    bounds = h.bounds
+    assert bounds == (1e-3, 2e-3, 4e-3, 8e-3)
+    assert h.bucket_index(1e-3) == 0  # v <= le inclusive
+    assert h.bucket_index(1e-3 * 1.0000001) == 1
+    assert h.bucket_index(2e-3) == 1
+    assert h.bucket_index(5e-3) == 3
+    assert h.bucket_index(8e-3) == 3
+    assert h.bucket_index(9e-3) == 4  # +Inf slot
+    assert h.bucket_index(0.0) == 0
+
+
+def test_histogram_quantiles_bounded_by_observations():
+    h = Histogram("repro_test_h2")
+    for v in (0.001, 0.002, 0.004, 0.100):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 4
+    assert s["min"] == pytest.approx(0.001)
+    assert s["max"] == pytest.approx(0.100)
+    # interpolated quantiles stay inside the observed range and are ordered
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+    # cumulative buckets are monotone and end at the total
+    cums = [c for _, c in s["buckets"]]
+    assert cums == sorted(cums) and cums[-1] == 4
+
+
+def test_registry_type_clash_raises():
+    reg = MetricsRegistry()
+    reg.counter("repro_test_name")
+    with pytest.raises(ValueError):
+        reg.gauge("repro_test_name")
+    with pytest.raises(ValueError):
+        reg.histogram("repro_test_name")
+
+
+# -------------------------------------------------------------- exposition
+def test_zero_metrics_scrape_well_formed():
+    """A scrape before any traffic must still be valid exposition: every
+    registered instrument appears with zero values, no crash on empty
+    histograms."""
+    reg = MetricsRegistry()
+    reg.counter("repro_test_zero_total")
+    reg.gauge("repro_test_zero_depth")
+    reg.histogram("repro_test_zero_seconds")
+    text = reg.render_prometheus()
+    assert "# TYPE repro_test_zero_total counter" in text
+    assert "repro_test_zero_total 0" in text
+    assert "repro_test_zero_depth 0" in text
+    assert '_bucket{le="+Inf"} 0' in text
+    assert "repro_test_zero_seconds_count 0" in text
+    assert text.endswith("\n")
+    # every non-comment line is "name{labels} value"
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        parts = line.rsplit(" ", 1)
+        assert len(parts) == 2 and parts[0]
+        float(parts[1].replace("+Inf", "inf"))
+
+
+def test_render_prometheus_formats_values():
+    snap = {"counters": {"c_total": 3.0}, "gauges": {"g": 1.5},
+            "histograms": {}}
+    text = render_prometheus(snap)
+    assert "c_total 3\n" in text  # integral floats render as ints
+    assert "g 1.5" in text
+
+
+def test_broken_collector_never_breaks_scrape():
+    reg = MetricsRegistry()
+    reg.counter("repro_test_ok_total").inc()
+
+    def broken():
+        raise RuntimeError("collector bug")
+
+    reg.register_collector(broken)
+    snap = reg.snapshot()
+    assert snap["counters"]["repro_test_ok_total"] == 1.0
+
+
+# ----------------------------------------------------------------- tracing
+def test_trace_context_spans_and_ids():
+    tr = TraceContext()
+    assert len(tr.id_bytes()) == TRACE_ID_BYTES
+    assert current_trace() is None
+    with activate(tr):
+        assert current_trace() is tr
+        with maybe_span("work"):
+            pass
+        with maybe_span("work"):
+            pass
+    assert current_trace() is None
+    totals = tr.span_totals()
+    assert set(totals) == {"work"} and totals["work"] >= 0.0
+    assert len(tr.spans) == 2
+    # maybe_span with no active trace is a no-op, not an error
+    with maybe_span("orphan"):
+        pass
+    assert len(tr.spans) == 2
+
+
+def test_trace_propagates_across_executor():
+    """IOExecutor workers must inherit the submitter's trace — the engine
+    relies on this for prefetch spans."""
+    from repro.runtime.executor import IOExecutor
+
+    tr = TraceContext()
+    with IOExecutor(max_workers=2) as ex:
+        with activate(tr):
+            fut = ex.submit(lambda: current_trace())
+        assert fut.result(timeout=10) is tr
+        # no active trace at submit time -> worker sees none
+        fut2 = ex.submit(lambda: current_trace())
+        assert fut2.result(timeout=10) is None
+
+
+# ------------------------------------------------- cross-process (real node)
+@pytest.fixture(scope="module")
+def local_node(tmp_path_factory):
+    from repro.cluster import spawn_local_node
+
+    # generous ready deadline: under a full-suite run on a loaded shared
+    # container the child interpreter can take >30s just to import jax
+    node = spawn_local_node(str(tmp_path_factory.mktemp("obsnode")),
+                            block_size=16, codec="raw", metrics_port=0,
+                            ready_timeout_s=120.0)
+    yield node
+    node.close()
+
+
+def test_trace_id_propagates_to_node_scrape(local_node):
+    """A trace activated around client RPCs must cross the wire: the
+    node's OP_METRICS report carries the trace id and a server-side span
+    observation."""
+    import numpy as np
+
+    from repro.cluster import ClusterKVBlockStore
+
+    store = ClusterKVBlockStore([local_node.address], block_size=16)
+    try:
+        tr = TraceContext()
+        tokens = list(range(32))
+        blocks = [np.ones((16, 8), dtype=np.float32)] * 2
+        with activate(tr):
+            store.put_batch(tokens, blocks, start_block=0)
+            store.flush()
+            got = store.get_batch(tokens, 32)
+        assert len(got) == 2
+        m = store.nodes[0].metrics()
+        assert tr.trace_id in m["traces"]
+        span = m["metrics"]["histograms"]["repro_node_trace_server_span_seconds"]
+        assert span["count"] >= 3  # put + flush + get all carried the trace
+        assert m["metrics"]["counters"]["repro_node_trace_requests_total"] >= 3
+        # untraced RPCs don't count as traced
+        untraced_before = m["metrics"]["counters"]["repro_node_trace_requests_total"]
+        store.probe(tokens)
+        m2 = store.nodes[0].metrics()
+        assert m2["metrics"]["counters"]["repro_node_trace_requests_total"] == untraced_before
+    finally:
+        store.close()
+
+
+def test_node_http_exposition(local_node):
+    """--metrics-port serves Prometheus text over HTTP with per-op
+    latency histograms present."""
+    assert local_node.metrics_port
+    url = f"http://127.0.0.1:{local_node.metrics_port}/metrics"
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        assert resp.headers["Content-Type"].startswith("text/plain")
+        text = resp.read().decode()
+    assert "# TYPE repro_node_request_seconds histogram" in text
+    assert "repro_server_requests" in text
+    assert "repro_node_request_seconds_p99" in text
+
+
+def test_scrape_cluster_reports_dead_node_unreachable(tmp_path):
+    """scrape_cluster must flag a killed node as unreachable and keep
+    returning live nodes' metrics — never hang on the corpse."""
+    from repro.cluster import ClusterKVBlockStore, spawn_local_node
+
+    nodes = [spawn_local_node(str(tmp_path / f"n{i}"), block_size=16,
+                              codec="raw", ready_timeout_s=120.0)
+             for i in range(2)]
+    store = ClusterKVBlockStore([n.address for n in nodes], block_size=16,
+                                retries=0, timeout_s=10.0)
+    try:
+        nodes[1].kill()
+        scrape = store.scrape_cluster()
+        assert scrape["nodes"][1].get("unreachable")
+        assert not scrape["nodes"][0].get("unreachable")
+        assert scrape["nodes"][0]["metrics"]["gauges"]["repro_server_requests"] >= 0
+        assert 1 in scrape["down"] and 0 in scrape["live"]
+        # second scrape: the dead node is already marked down, no RPC retry
+        scrape2 = store.scrape_cluster()
+        assert scrape2["nodes"][1].get("unreachable")
+    finally:
+        store.close()
+        for n in nodes:
+            n.close()
