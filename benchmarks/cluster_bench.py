@@ -29,7 +29,15 @@ processes on localhost driven by one ``ClusterKVBlockStore`` client:
    absolute rates are noisy there; ratios are the signal.  See
    docs/BENCHMARKS.md.
 
-3. FAILOVER: an R=2 cluster loses a node after commit and must serve
+3. COMPRESSION TIERS: the capacity question re-asked per codec policy
+   at ONE raw-calibrated budget — raw vs static int8+zlib vs the
+   adaptive ``tiered`` policy (hot puts raw, maintenance demotes idle
+   files down-tier).  Effective-capacity multiplier, wire bytes per
+   served block (compressed payloads ship end to end), per-tier
+   OP_METRICS gauges, and a paired put-overhead check that the policy
+   costs nothing on the ingest hot path.
+
+4. FAILOVER: an R=2 cluster loses a node after commit and must serve
    every committed block from the survivor (zero lost blocks;
    ``examples/failover.py`` demonstrates the full kill/rejoin story).
 
@@ -96,14 +104,16 @@ class _LocalCluster:
     def __init__(self, n_nodes: int, block_tokens: int, replication: int = 1,
                  node_io_threads: int = 2, client_io_threads: int = 16,
                  backend: str = "lsm", codec: str = "int8-zlib",
-                 budget_bytes: int = 0, vlog_file_bytes: int = 0):
+                 budget_bytes: int = 0, vlog_file_bytes: int = 0,
+                 node_extra_args: Optional[List[str]] = None):
         self.roots = [tempfile.mkdtemp(prefix=f"clbench_{n_nodes}n_{i}_")
                       for i in range(n_nodes)]
         self.nodes = [
             spawn_local_node(root, block_size=block_tokens, backend=backend,
                              codec=codec, io_threads=node_io_threads,
                              budget_bytes=budget_bytes,
-                             vlog_file_bytes=vlog_file_bytes)
+                             vlog_file_bytes=vlog_file_bytes,
+                             extra_args=node_extra_args)
             for root in self.roots
         ]
         self.store = ClusterKVBlockStore(
@@ -211,6 +221,239 @@ def capacity_sweep(
         top = max(out["nodes"])
         print(f"  {top}-node served-block throughput vs 1-node: "
               f"{out['nodes'][top]['speedup']:.2f}x")
+    return out
+
+
+# ------------------------------------------------------ compression sweep
+def _drain_demotions(cl: _LocalCluster, max_rounds: int = 12) -> int:
+    """Run maintenance cycles until no node demotes anything (the tier
+    recoder has settled); returns total demoted blocks."""
+    total = 0
+    for _ in range(max_rounds):
+        rep = cl.store.maintenance()
+        demoted = 0
+        for nrep in rep["nodes"].values():
+            demoted += int(((nrep or {}).get("tiering") or {})
+                           .get("demoted_blocks", 0) or 0)
+        total += demoted
+        if demoted == 0:
+            break
+    return total
+
+
+def _tier_gauges(cl: _LocalCluster) -> Dict[str, float]:
+    """Cluster-summed tiering gauges off the OP_METRICS scrape — the same
+    numbers an operator's dashboard would plot."""
+    sums: Dict[str, float] = {}
+    for rep in cl.store.scrape_cluster()["nodes"].values():
+        if rep.get("unreachable"):
+            continue
+        for k, v in rep["metrics"]["gauges"].items():
+            if k.startswith(("repro_store_tier_", "repro_store_demote")):
+                sums[k] = sums.get(k, 0.0) + v
+    return sums
+
+
+def _put_overhead(
+    n_seqs: int,
+    blocks_per_seq: int,
+    block_tokens: int,
+    kv_bytes_per_token: int,
+    repeats: int = 3,
+) -> Dict:
+    """Paired local ingest: raw codec vs the tiered policy (which also
+    writes raw on the hot path — demotion is maintenance-only).  The
+    acceptance gate is that enabling the policy costs nothing at put
+    time; interleaved best-of-``repeats`` samples keep container noise
+    from deciding the comparison."""
+    from repro.core.codec import CODEC_RAW, BatchCodec
+    from repro.core.store import KVBlockStore
+    from repro.core.tiering import TieringPolicy
+
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token, seed=31)
+    put_items = [(s, bs, 0) for s, bs in zip(seqs, blocks)]
+    total_blocks = n_seqs * blocks_per_seq
+    variants = {
+        "raw": lambda: dict(codec=BatchCodec(CODEC_RAW, use_zlib=False)),
+        "tiered": lambda: dict(tiering=TieringPolicy()),  # default thresholds:
+    }                                                     # nothing demotes mid-run
+    best = {name: 0.0 for name in variants}
+    for _ in range(repeats):
+        for name, kw in variants.items():
+            root = tempfile.mkdtemp(prefix=f"clbench_put_{name}_")
+            try:
+                st = KVBlockStore(root, block_size=block_tokens, **kw())
+                t0 = time.perf_counter()
+                st.put_many(put_items)
+                st.flush()
+                dt = time.perf_counter() - t0
+                st.close()
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+            best[name] = max(best[name], total_blocks / dt)
+    return {
+        "raw_put_blocks_per_s": best["raw"],
+        "tiered_put_blocks_per_s": best["tiered"],
+        "regression_pct": 100.0 * (1.0 - best["tiered"] / best["raw"]),
+    }
+
+
+def compression_sweep(
+    codecs: Sequence[str] = ("raw", "int8-zlib", "tiered"),
+    node_counts: Sequence[int] = (1, 2, 4),
+    n_seqs: int = 96,
+    blocks_per_seq: int = 12,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 1024,
+    budget_slack: float = 1.4,
+    repeats: int = 3,
+    ingest_chunks: int = 6,
+    put_repeats: int = 3,
+    verbose: bool = True,
+) -> Dict:
+    """Capacity scale-out per codec policy at ONE fixed budget.
+
+    Unlike ``capacity_sweep`` (which calibrates the budget to whatever
+    codec it measures), this sweep calibrates once against the RAW
+    footprint and holds the per-node budget fixed across codecs — the
+    apples-to-apples question an operator asks: *with the disks I have,
+    how much more corpus does a compressed tier let me serve?*
+
+    The ``tiered`` policy (hot puts raw; maintenance demotes idle files
+    to int8 / int8+zlib) runs with zero thresholds so every sealed file
+    demotes at the next cycle, and ingest is chunked with a maintenance
+    call between chunks — the deployment cadence, where off-path
+    demotion keeps pace with ingest instead of racing FIFO eviction
+    after the fact.  Reported per codec and node count:
+
+    * ``served_fraction`` / ``served_blocks_per_s`` — as capacity_sweep,
+    * ``capacity_x_vs_raw`` — served_fraction relative to raw at the
+      same node count (the effective-capacity multiplier),
+    * ``wire_bytes_per_served_block`` and ``wire_ratio_vs_raw`` — bytes
+      on the wire per block served (compressed tiers ship compressed
+      payloads end to end; the client decodes at fulfill),
+    * for ``tiered``: demoted blocks, per-tier block gauges and
+      bytes-saved scraped over OP_METRICS mid-bench.
+
+    A paired local ingest run (``put_overhead``) pins the hot-path
+    claim: enabling the tiering policy must not slow raw puts."""
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token)
+    n_tokens = blocks_per_seq * block_tokens
+    total_blocks = n_seqs * blocks_per_seq
+    get_items = [(s, n_tokens) for s in seqs]
+    put_items = [(s, bs, 0) for s, bs in zip(seqs, blocks)]
+
+    # calibration: the RAW footprint sets the budget for every codec
+    cal = _LocalCluster(1, block_tokens, backend="lsm", codec="raw")
+    try:
+        cal.store.put_many(put_items)
+        cal.store.flush()
+        raw_footprint = cal.store.disk_bytes
+    finally:
+        cal.close()
+    budget = int(raw_footprint * budget_slack / max(node_counts))
+
+    out: Dict = {
+        "corpus_bytes": total_blocks * block_tokens * kv_bytes_per_token,
+        "total_blocks": total_blocks,
+        "raw_disk_footprint_bytes": raw_footprint,
+        "per_node_budget_bytes": budget,
+        "budget_slack": budget_slack,
+        "node_counts": list(node_counts),
+        "codecs": {},
+    }
+    chunk = max(1, n_seqs // max(1, ingest_chunks))
+    for codec in codecs:
+        extra = (["--warm-after-s", "0", "--cold-after-s", "0"]
+                 if codec == "tiered" else None)
+        rows: Dict[int, Dict] = {}
+        for n in node_counts:
+            cl = _LocalCluster(n, block_tokens, backend="lsm", codec=codec,
+                               budget_bytes=budget,
+                               vlog_file_bytes=budget // 8,
+                               node_extra_args=extra)
+            try:
+                for i in range(0, n_seqs, chunk):
+                    cl.store.put_many(put_items[i:i + chunk])
+                    cl.store.flush()
+                    cl.store.maintenance()  # demote + budget, ingest cadence
+                demoted = _drain_demotions(cl)
+                rep0 = cl.store.report(include_nodes=False)
+                rx0 = sum(r["bytes_received"] for r in rep0["rpc"].values())
+                best, served = 0.0, 0
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    got = cl.store.get_many(get_items)
+                    dt = time.perf_counter() - t0
+                    served = sum(len(g) for g in got)
+                    best = max(best, served / dt)
+                rep1 = cl.store.report(include_nodes=False)
+                rx = (sum(r["bytes_received"] for r in rep1["rpc"].values())
+                      - rx0) / repeats
+                row = {
+                    "served_blocks_per_s": best,
+                    "served_fraction": served / total_blocks,
+                    "disk_bytes": cl.store.disk_bytes,
+                    "wire_bytes_per_get": rx,
+                    "wire_bytes_per_served_block": rx / max(served, 1),
+                }
+                if codec == "tiered":
+                    row["demoted_blocks"] = demoted
+                    gauges = _tier_gauges(cl)
+                    row["tier_blocks"] = {
+                        t: gauges.get(f"repro_store_tier_{t}_blocks", 0.0)
+                        for t in ("hot", "warm", "cold")
+                    }
+                    row["demote_bytes_saved"] = (
+                        gauges.get("repro_store_demote_bytes_before", 0.0)
+                        - gauges.get("repro_store_demote_bytes_after", 0.0))
+            finally:
+                cl.close()
+            rows[n] = row
+            if verbose:
+                print(f"  {codec:9s} {n} node(s) @ {budget >> 20}MiB/node: "
+                      f"served {row['served_fraction']:5.1%} at {best:7.0f} blk/s, "
+                      f"{row['wire_bytes_per_served_block']:6.0f} wire B/blk")
+        full = [n for n in node_counts if rows[n]["served_fraction"] >= 0.999]
+        out["codecs"][codec] = {
+            "nodes": rows,
+            "nodes_to_full": min(full) if full else None,
+        }
+
+    # derived: effective capacity + wire ratio vs the raw baseline
+    raw_rows = out["codecs"].get("raw", {}).get("nodes", {})
+    for codec, entry in out["codecs"].items():
+        if codec == "raw":
+            continue
+        for n, row in entry["nodes"].items():
+            base = raw_rows.get(n)
+            if not base:
+                continue
+            row["capacity_x_vs_raw"] = (
+                row["served_fraction"] / max(base["served_fraction"], 1e-9))
+            row["wire_ratio_vs_raw"] = (
+                base["wire_bytes_per_served_block"]
+                / max(row["wire_bytes_per_served_block"], 1e-9))
+    tight = min(node_counts)  # the most budget-constrained point
+    out["effective_capacity_x"] = {
+        codec: entry["nodes"][tight].get("capacity_x_vs_raw")
+        for codec, entry in out["codecs"].items() if codec != "raw"
+    }
+    out["put_overhead"] = _put_overhead(
+        max(8, n_seqs // 2), blocks_per_seq, block_tokens, kv_bytes_per_token,
+        repeats=put_repeats)
+    if verbose:
+        for codec, x in out["effective_capacity_x"].items():
+            if x is not None:
+                print(f"  {codec}: {x:.2f}x effective capacity vs raw at "
+                      f"{tight} node(s)")
+        po = out["put_overhead"]
+        print(f"  tiered-policy put overhead vs raw codec: "
+              f"{po['regression_pct']:+.1f}% "
+              f"({po['tiered_put_blocks_per_s']:.0f} vs "
+              f"{po['raw_put_blocks_per_s']:.0f} blk/s)")
     return out
 
 
@@ -504,19 +747,64 @@ def run(quick: bool = False, verbose: bool = True) -> Dict:
         repeats=3 if quick else 5,
         verbose=verbose,
     )
+    if verbose:
+        print(" compression tiers (fixed raw-calibrated budget per codec):")
+    comp = compression_sweep(
+        node_counts=(1, 4) if quick else (1, 2, 4),
+        n_seqs=48 if quick else 96,
+        repeats=2 if quick else 3,
+        put_repeats=2 if quick else 3,
+        verbose=verbose,
+    )
     fo = failover_check(verbose=verbose)
     if verbose:
         print(" observability (mid-load OP_METRICS scrape of a live cluster):")
     obs = observability_check(verbose=verbose)
-    out = {"capacity": cap, "serving": srv, "failover": fo, "observability": obs}
+    out = {"capacity": cap, "serving": srv, "compression": comp,
+           "failover": fo, "observability": obs}
     common.save_artifact("cluster", out)
     return out
+
+
+def compression_smoke(verbose: bool = True) -> Dict:
+    """CI-sized single-node compression check: a deliberately tight
+    budget (half the raw footprint) forces raw to evict while the tiered
+    policy compresses its way under the budget.  Asserts the tentpole's
+    end-to-end claims at toy scale in a few seconds."""
+    comp = compression_sweep(
+        codecs=("raw", "tiered"),
+        node_counts=(1,),
+        n_seqs=12, blocks_per_seq=6, kv_bytes_per_token=512,
+        budget_slack=0.55,
+        repeats=1, ingest_chunks=3, put_repeats=1,
+        verbose=verbose,
+    )
+    raw = comp["codecs"]["raw"]["nodes"][1]
+    tiered = comp["codecs"]["tiered"]["nodes"][1]
+    assert tiered["demoted_blocks"] > 0, "maintenance demoted nothing"
+    assert tiered["tier_blocks"]["cold"] > 0, "no blocks reached the cold tier"
+    assert tiered["served_fraction"] >= raw["served_fraction"], (
+        f"tiered served {tiered['served_fraction']:.2%} < raw "
+        f"{raw['served_fraction']:.2%} at the same budget")
+    assert tiered["wire_bytes_per_served_block"] < raw["wire_bytes_per_served_block"], \
+        "compressed tiers did not shrink wire bytes"
+    if verbose:
+        print("  compression smoke OK: tiered served "
+              f"{tiered['served_fraction']:.1%} vs raw "
+              f"{raw['served_fraction']:.1%} at half-footprint budget")
+    return comp
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--compression-smoke", action="store_true",
+                    help="single-node tiered-vs-raw check with asserts "
+                         "(CI-sized; skips the full sweeps)")
     args = ap.parse_args(argv)
+    if args.compression_smoke:
+        compression_smoke()
+        return
     run(quick=args.quick)
 
 

@@ -146,6 +146,7 @@ def main(argv=None):
 
         cb = cluster_bench.run(quick=args.quick)
         cap, srv, fo = cb["capacity"], cb["serving"], cb["failover"]
+        comp = cb["compression"]
         top = max(int(k) for k in cap["nodes"])
         bench = {
             "benchmark": "cluster",
@@ -178,6 +179,34 @@ def main(argv=None):
                     for n, row in srv["nodes"].items()
                 },
             },
+            "compression": {
+                "per_node_budget_bytes": comp["per_node_budget_bytes"],
+                "raw_disk_footprint_bytes": comp["raw_disk_footprint_bytes"],
+                "effective_capacity_x": comp["effective_capacity_x"],
+                "put_overhead": comp["put_overhead"],
+                "codecs": {
+                    codec: {
+                        "nodes_to_full": entry["nodes_to_full"],
+                        "nodes": {
+                            str(n): {
+                                "served_blocks_per_s": row["served_blocks_per_s"],
+                                "served_fraction": row["served_fraction"],
+                                "wire_bytes_per_served_block":
+                                    row["wire_bytes_per_served_block"],
+                                **({"capacity_x_vs_raw": row["capacity_x_vs_raw"],
+                                    "wire_ratio_vs_raw": row["wire_ratio_vs_raw"]}
+                                   if "capacity_x_vs_raw" in row else {}),
+                                **({"tier_blocks": row["tier_blocks"],
+                                    "demoted_blocks": row["demoted_blocks"],
+                                    "demote_bytes_saved": row["demote_bytes_saved"]}
+                                   if "tier_blocks" in row else {}),
+                            }
+                            for n, row in entry["nodes"].items()
+                        },
+                    }
+                    for codec, entry in comp["codecs"].items()
+                },
+            },
             "failover": {
                 "replication": fo["replication"],
                 "committed_blocks": fo["committed_blocks"],
@@ -199,10 +228,16 @@ def main(argv=None):
         full = srv_row.get("full_batch_get_s")
         ttfb_note = (f"; ttfb {1e3 * ttfb:.1f}ms vs full batch {1e3 * full:.1f}ms"
                      if ttfb is not None and full is not None else "")
+        cap_x = {k: v for k, v in comp["effective_capacity_x"].items()
+                 if v is not None}
+        comp_note = (
+            "; effective capacity "
+            + ", ".join(f"{k} {v:.2f}x" for k, v in sorted(cap_x.items()))
+            if cap_x else "")
         print(f"wrote BENCH_cluster.json ({top}-node served-block throughput "
               f"{cap['nodes'][top]['speedup']:.2f}x 1-node; serving "
               f"{srv_row['get_speedup']:.2f}x at fixed per-node budget"
-              f"{ttfb_note}; failover lost "
+              f"{ttfb_note}{comp_note}; failover lost "
               f"{fo['lost_committed_blocks']} committed blocks)")
 
     print(f"\nall benchmarks done in {time.time() - t_all:.0f}s; artifacts in benchmarks/artifacts/")

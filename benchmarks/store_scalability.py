@@ -283,6 +283,99 @@ def io_thread_sweep(
     return out
 
 
+# ----------------------------------------------------------- codec sweep
+def codec_sweep(
+    n_seqs: int = 64,
+    blocks_per_seq: int = 8,
+    block_tokens: int = 16,
+    kv_bytes: int = 1024,
+    repeats: int = 3,
+    verbose=True,
+):
+    """Single-store codec-policy comparison: the same ingest+read stream
+    through raw, int8, int8+zlib, and the adaptive ``tiered`` policy
+    (hot puts raw; ``maintenance()`` demotes sealed files down-tier —
+    ``core.tiering``).  Reports ingest/read throughput and the on-disk
+    footprint; for ``tiered``, the footprint before and after demotion
+    settles plus the demoted-block count.  Configurations are
+    interleaved across ``repeats`` rounds, best-of reported (the shard
+    sweep's noise policy).  The closing gate is the tentpole's hot-path
+    claim: the tiered policy's ingest throughput must track raw's."""
+    from repro.core.tiering import TieringPolicy
+
+    rng = np.random.default_rng(3)
+    feat = kv_bytes // 4
+    seqs, payloads = [], []
+    for _ in range(n_seqs):
+        seqs.append(rng.integers(0, 50000,
+                                 size=blocks_per_seq * block_tokens).tolist())
+        scale = rng.uniform(0.5, 2.0)
+        payloads.append([
+            (scale * rng.standard_normal((block_tokens, feat))).astype(np.float32)
+            for _ in range(blocks_per_seq)
+        ])
+    total_blocks = n_seqs * blocks_per_seq
+    variants = {
+        "raw": lambda: dict(codec=BatchCodec(CODEC_RAW, use_zlib=False)),
+        "int8": lambda: dict(codec=BatchCodec(CODEC_INT8, use_zlib=False)),
+        "int8-zlib": lambda: dict(codec=BatchCodec(CODEC_INT8, use_zlib=True)),
+        "tiered": lambda: dict(
+            tiering=TieringPolicy(warm_after_s=0.0, cold_after_s=0.0)),
+    }
+    out = {}
+    for rep in range(repeats):
+        for name, kw in variants.items():
+            root = tempfile.mkdtemp(prefix=f"scal_codec_{name}_r{rep}_")
+            store = KVBlockStore(os.path.join(root, "s"),
+                                 block_size=block_tokens,
+                                 vlog_file_bytes=256 * 1024, **kw())
+            t0 = time.perf_counter()
+            for tokens, blocks in zip(seqs, payloads):
+                store.put_batch(tokens, blocks)
+            store.flush()
+            ingest_s = time.perf_counter() - t0
+            footprint_hot = store.disk_bytes
+            demoted = 0
+            for _ in range(12):  # let the tier recoder settle
+                d = int(((store.maintenance().get("tiering") or {})
+                         .get("demoted_blocks", 0)) or 0)
+                demoted += d
+                if d == 0:
+                    break
+            t0 = time.perf_counter()
+            hit = sum(len(store.get_batch(t, store.probe(t))) for t in seqs)
+            read_s = time.perf_counter() - t0
+            rec = {
+                "ingest_blocks_per_s": total_blocks / ingest_s,
+                "read_blocks_per_s": hit / max(1e-9, read_s),
+                "disk_bytes": store.disk_bytes,
+                "disk_bytes_before_demotion": footprint_hot,
+                "demoted_blocks": demoted,
+                "served_blocks": hit,
+            }
+            store.close()
+            best = out.get(name)
+            if best is None or rec["ingest_blocks_per_s"] > best["ingest_blocks_per_s"]:
+                out[name] = rec
+    raw = out["raw"]
+    for name, rec in out.items():
+        rec["footprint_vs_raw"] = rec["disk_bytes"] / max(1, raw["disk_bytes"])
+    out["tiered"]["put_regression_pct"] = 100.0 * (
+        1.0 - out["tiered"]["ingest_blocks_per_s"] / raw["ingest_blocks_per_s"])
+    if verbose:
+        for name, rec in out.items():
+            print(f"codec={name:9s} ingest {rec['ingest_blocks_per_s']:8.0f} blk/s  "
+                  f"read {rec['read_blocks_per_s']:8.0f} blk/s  "
+                  f"disk {rec['disk_bytes']/1e6:6.1f}MB "
+                  f"({rec['footprint_vs_raw']:.2f}x raw)")
+        print(f"tiered demotion: {out['tiered']['demoted_blocks']} blocks, "
+              f"{out['tiered']['disk_bytes_before_demotion']/1e6:.1f}MB -> "
+              f"{out['tiered']['disk_bytes']/1e6:.1f}MB; "
+              f"put regression vs raw {out['tiered']['put_regression_pct']:+.1f}%")
+    common.save_artifact("store_scalability_codecs", out)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--shards", type=int, nargs="*", default=None,
@@ -295,6 +388,9 @@ def main(argv=None):
     ap.add_argument("--blocks-per-batch", type=int, default=64)
     ap.add_argument("--skip-backends", action="store_true",
                     help="skip the lsm-vs-file comparison")
+    ap.add_argument("--codecs", action="store_true",
+                    help="run the codec-policy sweep (raw / int8 / "
+                         "int8-zlib / tiered)")
     args = ap.parse_args(argv)
     if not args.skip_backends:
         run(n_batches=args.n_batches, blocks_per_batch=args.blocks_per_batch)
@@ -302,6 +398,8 @@ def main(argv=None):
         shard_sweep(shard_counts=tuple(args.shards))
     if args.io_threads:
         io_thread_sweep(io_threads=tuple(args.io_threads))
+    if args.codecs:
+        codec_sweep()
 
 
 if __name__ == "__main__":

@@ -25,6 +25,15 @@ pipeline them (paper §3.4 batch operations):
 batch committed between plan and fulfill may have grown the tree, and a
 prefetch must never install stale state.
 
+Compression tiers are invisible here: a block demoted to int8 or
+int8+zlib (``core.tiering``) travels still-encoded through the store and
+over the cluster wire (``LAYOUT_ENCODED`` / vlog chunks) and is decoded
+at the fulfill boundary — locally by ``get_batch``, remotely by the
+client's chunk decode as ``_StreamedBlocks`` drains — so ``fulfill``
+always installs dense tensors and never sees a codec tag.  With a
+streamed fetch that decode is lazy: a cold block still on the wire is
+not decompressed until ``fulfill`` asks for its index.
+
 ``commit`` installs into device memory on the engine thread and, when a
 ``CommitQueue`` is attached, hands the disk write-through to the
 write-behind drain thread instead of charging it to the request.

@@ -27,6 +27,7 @@ from ..core.baselines import MemoryOnlyStore
 from ..core.codec import CODEC_INT8, CODEC_RAW, BatchCodec
 from ..core.sharded_store import ShardedKVBlockStore
 from ..core.store import KVBlockStore
+from ..core.tiering import TieringPolicy
 from .server import CacheNodeServer
 
 
@@ -35,6 +36,7 @@ def make_backend(args) -> object:
         "raw": BatchCodec(CODEC_RAW, use_zlib=False),
         "int8": BatchCodec(CODEC_INT8, use_zlib=False),
         "int8-zlib": BatchCodec(CODEC_INT8, use_zlib=True),
+        "tiered": None,  # adaptive policy: puts are raw, maintenance demotes
     }[args.codec]
     budget = args.budget_bytes if args.budget_bytes > 0 else None
     if args.backend == "memory":
@@ -42,6 +44,10 @@ def make_backend(args) -> object:
     extra = {}
     if args.vlog_file_bytes > 0:
         extra["vlog_file_bytes"] = args.vlog_file_bytes
+    if args.codec == "tiered":
+        extra["tiering"] = TieringPolicy(
+            warm_after_s=args.warm_after_s, cold_after_s=args.cold_after_s
+        )
     if args.backend == "sharded":
         return ShardedKVBlockStore(
             args.root, n_shards=args.shards, block_size=args.block_size,
@@ -61,7 +67,15 @@ def main(argv=None) -> int:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--backend", choices=("lsm", "sharded", "memory"), default="lsm")
     ap.add_argument("--shards", type=int, default=2)
-    ap.add_argument("--codec", choices=("raw", "int8", "int8-zlib"), default="int8-zlib")
+    ap.add_argument("--codec", choices=("raw", "int8", "int8-zlib", "tiered"),
+                    default="int8-zlib",
+                    help="'tiered' writes raw and lets maintenance demote "
+                         "idle blocks to int8 / int8+zlib (core.tiering)")
+    ap.add_argument("--warm-after-s", type=float, default=30.0,
+                    help="tiered codec: demote a sealed log file idle this "
+                         "long to int8 (0 = next maintenance cycle)")
+    ap.add_argument("--cold-after-s", type=float, default=120.0,
+                    help="tiered codec: demote to int8+zlib after this idle")
     ap.add_argument("--budget-bytes", type=int, default=0, help="0 = unbounded")
     ap.add_argument("--vlog-file-bytes", type=int, default=0,
                     help="tensor-log roll size; 0 = backend default (bounds "

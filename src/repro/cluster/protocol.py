@@ -47,6 +47,15 @@ and ``BatchCodec.decode``s each record (the payload is self-describing),
 paying the decode CPU it would have paid anyway while the node stays out
 of the copy path entirely.
 
+A fourth layout (byte 3) carries *encoded codec payloads* — length-
+prefixed ``core.codec`` blobs exactly as stored, without the log-record
+framing.  This is the buffered complement of the sendfile path: when a
+backend exposes ``get_batch_encoded`` (the LSM stores do), the server
+ships the still-compressed bytes and the client decodes, so an
+int8+zlib cold tier moves ~3-4x fewer network bytes than decoded
+blocks would, on every read path.  Block lists whose items are
+bytes-like rather than ndarrays encode this way automatically.
+
 Robustness contract (property-tested in ``tests/test_cluster.py``):
 
 * ``encode``/``decode`` round-trip every op exactly;
@@ -74,7 +83,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.codec import BatchCodec
+from ..core.codec import BatchCodec, CodecError
 
 # Default cap on one frame.  A frame carries at most one batch of KV
 # blocks; 256 MiB is ~64k blocks of 4 KiB — far beyond any batch the
@@ -340,10 +349,19 @@ def _dec_block(r: _Reader) -> np.ndarray:
     return np.frombuffer(raw, dtype=dtype).reshape(shape)
 
 
-def _enc_blocks(blocks: Sequence[np.ndarray]) -> List:
-    """Encode a block list as parts for one final join.  Homogeneous
-    lists (layout 1, the common case) pack every block into a single
-    contiguous raw region; mixed lists (layout 0) ride per-block."""
+def _enc_blocks(blocks: Sequence) -> List:
+    """Encode a block list as parts for one final join.  Bytes-like items
+    (still-encoded codec payloads from ``get_batch_encoded``) ride as
+    layout 3 — the compressed bytes go over the wire verbatim.
+    Homogeneous ndarray lists (layout 1, the common case for decoded
+    blocks) pack every block into a single contiguous raw region; mixed
+    lists (layout 0) ride per-block."""
+    if blocks and all(isinstance(b, (bytes, bytearray, memoryview)) for b in blocks):
+        parts: List = [_U32.pack(len(blocks)), b"\x03"]
+        for p in blocks:
+            parts.append(_U32.pack(len(p)))
+            parts.append(p)
+        return parts
     arrs = [np.ascontiguousarray(b) for b in blocks]
     if arrs and all(
         a.dtype == arrs[0].dtype and a.shape == arrs[0].shape for a in arrs[1:]
@@ -356,11 +374,25 @@ def _enc_blocks(blocks: Sequence[np.ndarray]) -> List:
     return [_U32.pack(len(arrs)), b"\x00"] + [_enc_block(a) for a in arrs]
 
 
+def _dec_encoded_blocks(r: _Reader, n: int) -> List[np.ndarray]:
+    """Layout 3: length-prefixed self-describing codec payloads."""
+    blocks: List[np.ndarray] = []
+    for i in range(n):
+        payload = r.take(r.u32())
+        try:
+            blocks.append(BatchCodec.decode(payload))
+        except CodecError as e:
+            raise ProtocolError(f"bad encoded block payload at block {i}: {e}") from e
+    return blocks
+
+
 def _dec_blocks(r: _Reader) -> List[np.ndarray]:
     n = r.u32()
     layout = r.u8()
     if layout == 0:
         return [_dec_block(r) for _ in range(n)]
+    if layout == LAYOUT_ENCODED:
+        return _dec_encoded_blocks(r, n)
     if layout != 1:
         raise ProtocolError(f"unknown block layout {layout}")
     dtype, shape = _dec_dtype_head(r)
@@ -531,8 +563,11 @@ def decode_response(op: int, payload: bytes):
 # ------------------------------------------------------------ stream chunks
 # chunk body := u32 seq_index | u32 start_block | u32 n | u8 layout | ...
 # layouts 0/1 are the block-list layouts above; layout 2 is raw tensor-log
-# records (server sendfile path, client-side CRC + BatchCodec decode).
+# records (server sendfile path, client-side CRC + BatchCodec decode);
+# layout 3 is length-prefixed encoded codec payloads (buffered compressed
+# path, client-side BatchCodec decode).
 LAYOUT_VLOG = 2
+LAYOUT_ENCODED = 3
 _VLOG_HDR = struct.Struct("<III")  # crc | klen | plen — the on-disk record header
 
 
@@ -583,6 +618,8 @@ def decode_stream_chunk(body) -> Tuple[int, int, List[np.ndarray]]:
     layout = r.u8()
     if layout == LAYOUT_VLOG:
         blocks = _dec_vlog_records(r, n)
+    elif layout == LAYOUT_ENCODED:
+        blocks = _dec_encoded_blocks(r, n)
     elif layout == 0:
         blocks = [_dec_block(r) for _ in range(n)]
     elif layout == 1:

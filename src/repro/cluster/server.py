@@ -429,7 +429,12 @@ class CacheNodeServer:
                         return self._stream_raw(conn, rid, seq_index, rb, chunk_blocks)
                     finally:
                         rb.close()
-        blocks = self.backend.get_batch(tokens, n_tokens)
+        # buffered fallback: ship still-encoded payloads (layout 3) when
+        # the backend can hand them out — the compressed-bytes complement
+        # of the sendfile path, so even non-extent reads keep the wire
+        # compressed.  Backends without the method send decoded blocks.
+        enc_fn = getattr(self.backend, "get_batch_encoded", None)
+        blocks = (enc_fn or self.backend.get_batch)(tokens, n_tokens)
         for start in range(0, len(blocks), chunk_blocks):
             part = blocks[start : start + chunk_blocks]
             self._send(
@@ -520,8 +525,16 @@ class CacheNodeServer:
         if op == P.OP_PROBE_MANY:
             return b.probe_many(args[0])
         if op == P.OP_GET:
+            # prefer still-encoded payloads (layout 3): the wire carries
+            # the compressed bytes the disk stores; the client decodes
+            enc = getattr(b, "get_batch_encoded", None)
+            if enc is not None:
+                return enc(args[0], args[1])
             return b.get_batch(args[0], args[1])
         if op == P.OP_GET_MANY:
+            enc = getattr(b, "get_batch_encoded", None)
+            if enc is not None:
+                return [enc(tokens, n) for tokens, n in args[0]]
             return b.get_many(args[0])
         if op == P.OP_PUT:
             tokens, blocks, start_block, skip_existing = args

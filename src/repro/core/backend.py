@@ -18,6 +18,19 @@ The contract (paper §3.2, Fig. 6):
     flush() / close()                durability / lifecycle
     stats / disk_bytes / file_count  observability
 
+Optional fast-path methods (duck-typed; the cluster server probes with
+``getattr`` and falls back to ``get_batch``):
+
+    get_batch_raw(tokens, n)      the prefix as one contiguous tensor-log
+                                  extent (``RawBatch``) for ``os.sendfile``
+    get_batch_encoded(tokens, n)  the prefix as still-encoded codec
+                                  payloads (bytes), so compressed tiers
+                                  ship compressed over the wire
+
+The LSM backends also accept a ``tiering=TieringPolicy`` constructor
+argument (``core.tiering``): puts then write the raw hot tier and the
+maintenance cycle demotes idle blocks to int8 / int8+zlib off-path.
+
 Invariants every backend must keep:
   * ``probe`` never promises tokens ``get_batch`` would truncate — it
     reports a contiguous, immediately readable prefix;

@@ -181,6 +181,11 @@ class ShardedKVBlockStore:
         delegation)."""
         return self.shard_for(tokens).get_batch_raw(tokens, n_tokens)
 
+    def get_batch_encoded(self, tokens: Sequence[int], n_tokens: int):
+        """Encoded (still-compressed) payloads for the cached prefix —
+        shard-local like every other per-sequence op."""
+        return self.shard_for(tokens).get_batch_encoded(tokens, n_tokens)
+
     # ------------------------------------------------------- parallel fan-out
     def _shard_groups(self, seqs: Sequence[Sequence[int]]) -> Dict[int, List[int]]:
         """Map shard index -> positions in ``seqs`` routed to it."""
@@ -260,6 +265,13 @@ class ShardedKVBlockStore:
         for i, srep in zip(cycle, reports):
             rep["shards"][i] = srep
             rep["compactions"] += srep.get("compactions", 0)
+            tiering = srep.get("tiering")
+            if tiering:
+                agg = rep.setdefault(
+                    "tiering", {"files": 0, "demoted_blocks": 0,
+                                "bytes_before": 0, "bytes_after": 0})
+                for k in agg:
+                    agg[k] += tiering.get(k, 0)
         if self.budget_bytes is not None:
             rep["evicted_files"] = self._evict_to_budget()
         return rep

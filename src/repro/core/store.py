@@ -47,6 +47,14 @@ from .keycodec import encode_tokens
 from .lsm import LSMTree
 from .merge import TensorFileMerger
 from .tensorlog import PTR_BYTES, LogPointer, TensorLog
+from .tiering import (
+    TIER_HOT,
+    TIER_MASK,
+    TIER_NAMES,
+    TierRecoder,
+    TieringPolicy,
+    tier_of_codec,
+)
 
 ENTRY_BYTES = PTR_BYTES + 1
 
@@ -68,10 +76,24 @@ class StoreStats:
     io_write_s: float = 0.0
     raw_gets: int = 0  # get_batch_raw calls that found a sendfile-able extent
     raw_get_blocks: int = 0
+    # compression-tier accounting (see core.tiering).  The tier counts are
+    # resident blocks per tier — kept exact under put/demote/evict, drift
+    # only on overwrites (skip_existing=False superseding an indexed key).
+    tier_hot_blocks: int = 0
+    tier_warm_blocks: int = 0
+    tier_cold_blocks: int = 0
+    demoted_blocks: int = 0  # blocks re-encoded down-tier by maintenance
+    demote_bytes_before: int = 0  # payload bytes of demoted blocks, pre/post
+    demote_bytes_after: int = 0
+    demote_s: float = 0.0  # off-path wall time spent transcoding
 
     @property
     def compression_ratio(self) -> float:
         return self.payload_bytes_in / max(1, self.payload_bytes_stored)
+
+    @property
+    def demote_bytes_saved(self) -> int:
+        return self.demote_bytes_before - self.demote_bytes_after
 
 
 @dataclass
@@ -122,6 +144,7 @@ class KVBlockStore(BatchOpsMixin):
         controller_window: int = 4096,
         fsync: bool = False,
         fsync_writes: Optional[bool] = None,
+        tiering: Optional[TieringPolicy] = None,
     ):
         # ``fsync_writes`` is the documented knob; ``fsync`` is kept as a
         # backward-compatible alias (either turns durability on).
@@ -129,7 +152,19 @@ class KVBlockStore(BatchOpsMixin):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.block_size = block_size
-        self.codec = codec or BatchCodec(CODEC_INT8, use_zlib=True)
+        # With an adaptive tiering policy the put path always writes the
+        # hot tier's codec (raw — zero codec CPU on the hot path); the
+        # policy demotes blocks to int8 / int8+zlib off-path during
+        # maintenance.  Without a policy the static ``codec`` applies and
+        # every block is tagged with that codec's equivalent tier so the
+        # per-tier gauges stay meaningful.
+        self.tiering = tiering
+        if tiering is not None:
+            self.codec = tiering.codec_for(TIER_HOT)
+            self._put_tier = TIER_HOT
+        else:
+            self.codec = codec or BatchCodec(CODEC_INT8, use_zlib=True)
+            self._put_tier = tier_of_codec(self.codec)
         self.budget_bytes = budget_bytes
         self._lock = threading.RLock()  # serializes mutators (put/maintenance/evict)
         self._stats_lock = threading.Lock()  # stats counters + adaptive controller
@@ -152,6 +187,11 @@ class KVBlockStore(BatchOpsMixin):
         self.controller = AdaptiveController(
             self.index, window=controller_window, entry_bytes=ENTRY_BYTES, enabled=adaptive
         )
+        self.recoder = (
+            TierRecoder(self.log, self.index, tiering,
+                        entry_codec=(self._unpack_entry, self._pack_value))
+            if tiering is not None else None
+        )
         self.stats = StoreStats()
         # File eviction is the only operation that breaks prefix-closure
         # (holes mid-prefix); the marker persists that fact across reopens
@@ -171,6 +211,17 @@ class KVBlockStore(BatchOpsMixin):
     @staticmethod
     def _unpack_value(v: bytes) -> LogPointer:
         return LogPointer.unpack(v)
+
+    @staticmethod
+    def _unpack_entry(v: bytes):
+        """Full entry: ``(LogPointer, flags)`` — bits 0-1 of flags are the
+        compression tier (``core.tiering``)."""
+        return LogPointer.unpack(v), (v[PTR_BYTES] if len(v) > PTR_BYTES else 0)
+
+    def _bump_tier(self, tier: int, n: int) -> None:
+        """Adjust one resident-per-tier gauge; caller holds ``_stats_lock``."""
+        name = f"tier_{TIER_NAMES[tier]}_blocks"
+        setattr(self.stats, name, getattr(self.stats, name) + n)
 
     # ------------------------------------------------------------------- put
     def put_batch(
@@ -215,8 +266,11 @@ class KVBlockStore(BatchOpsMixin):
             # index insert can commit a pointer to them (the same internal
             # fsync also covers the merge service's relocation appends).
             ptrs = self.log.append_batch(records)
-            # phase 2: atomic index insert (WAL-backed commit point)
-            self.index.put_batch((k, self._pack_value(p)) for (k, _), p in zip(records, ptrs))
+            # phase 2: atomic index insert (WAL-backed commit point).  The
+            # flags byte carries the block's compression tier.
+            self.index.put_batch(
+                (k, self._pack_value(p, self._put_tier)) for (k, _), p in zip(records, ptrs)
+            )
         with self._stats_lock:
             self.controller.record(OP_WRITE, len(records))
             self.stats.payload_bytes_in += bytes_in
@@ -224,6 +278,7 @@ class KVBlockStore(BatchOpsMixin):
             self.stats.put_blocks += len(records)
             self.stats.put_tokens += len(records) * B
             self.stats.io_write_s += time.perf_counter() - t0
+            self._bump_tier(self._put_tier, len(records))
         return len(records)
 
     # ----------------------------------------------------------------- probe
@@ -337,6 +392,43 @@ class KVBlockStore(BatchOpsMixin):
             self.stats.io_read_s += time.perf_counter() - t0
         return out
 
+    def get_batch_encoded(self, tokens: Sequence[int], n_tokens: int) -> List[bytes]:
+        """The contiguous cached prefix as *encoded* codec payloads —
+        no decode.  The cluster server ships these verbatim, so the wire
+        carries the same compressed bytes the disk stores (the buffered
+        complement of the sendfile path, which already ships raw log
+        records).  Payloads are self-describing (``core.codec`` header);
+        the receiver decodes with ``BatchCodec.decode``."""
+        B = self.block_size
+        n_blocks = n_tokens // B
+        if n_blocks == 0:
+            return []
+        t0 = time.perf_counter()
+        payloads: List[Optional[bytes]] = [None] * n_blocks
+        for _attempt in range(3):  # same retry contract as get_batch
+            ptrs = self._scan_block_ptrs(tokens, n_blocks)
+            present = [(i, p) for i, p in enumerate(ptrs) if p is not None]
+            payloads = [None] * n_blocks
+            if not present:
+                break
+            try:
+                recs = self.log.read_batch([p for _, p in present])
+            except FileNotFoundError:
+                continue  # lost the race with eviction/merge/demotion: retry
+            for (i, _), (_, payload) in zip(present, recs):
+                payloads[i] = bytes(payload)
+            break
+        out: List[bytes] = []
+        for p in payloads:
+            if p is None:
+                break
+            out.append(p)
+        with self._stats_lock:
+            self.stats.get_blocks += len(out)
+            self.stats.get_tokens += len(out) * B
+            self.stats.io_read_s += time.perf_counter() - t0
+        return out
+
     def get_batch_raw(self, tokens: Sequence[int], n_tokens: int) -> Optional[RawBatch]:
         """Zero-copy variant of ``get_batch``: when the contiguous cached
         prefix sits as one adjacent run of records in a single tensor-log
@@ -364,6 +456,7 @@ class KVBlockStore(BatchOpsMixin):
             f = open(ext.path, "rb")
         except FileNotFoundError:
             return None  # lost the race with eviction/merge; caller retries decoded
+        self.log.touch(run[0].file_id)  # sendfile reads count as access too
         with self._stats_lock:
             self.stats.raw_gets += 1
             self.stats.raw_get_blocks += len(run)
@@ -382,9 +475,29 @@ class KVBlockStore(BatchOpsMixin):
             if self.merger.needed():
                 m = self.merger.run()
                 rep["merge"] = {"files": m.files_removed, "moved": m.records_moved, "reclaimed": m.bytes_reclaimed}
+            # tier demotion runs before budget eviction so the budget is
+            # enforced against the *compressed* footprint — this ordering
+            # is what lets a fixed budget hold 3-4x more cold blocks
+            if self.recoder is not None and self.recoder.needed():
+                t0 = time.perf_counter()
+                trep = self.recoder.run()
+                self._apply_tier_report(trep, time.perf_counter() - t0)
+                if trep.files:
+                    rep["tiering"] = trep.as_dict()
             if self.budget_bytes is not None:
                 rep["evicted_files"] = self._evict_to_budget()
             return rep
+
+    def _apply_tier_report(self, trep, dt: float) -> None:
+        with self._stats_lock:
+            self.stats.demoted_blocks += trep.demoted_blocks
+            self.stats.demote_bytes_before += trep.bytes_before
+            self.stats.demote_bytes_after += trep.bytes_after
+            self.stats.demote_s += dt
+            for name, n in trep.transitions.items():
+                src, _, dst = name.partition("->")
+                self._bump_tier(TIER_NAMES.index(src), -n)
+                self._bump_tier(TIER_NAMES.index(dst), n)
 
     def evict_oldest_file(self) -> bool:
         """Drop the oldest tensor-log file and tombstone its index entries
@@ -404,15 +517,20 @@ class KVBlockStore(BatchOpsMixin):
             # one batched tombstone insert (single WAL sync under
             # fsync_writes) instead of a per-key delete loop
             dead = []
+            tiers = [0, 0, 0]  # evicted blocks per compression tier
             for key in keys:
                 found, v = self.index.get(key)
                 if found and self._unpack_value(v).file_id == fid:
                     dead.append(key)
+                    tiers[self._unpack_entry(v)[1] & TIER_MASK] += 1
             self.index.put_batch((k, None) for k in dead)
             evicted = len(dead)
             self.log.remove_file(fid)
         with self._stats_lock:
             self.stats.evicted_blocks += evicted
+            for tier, n in enumerate(tiers):
+                if n:
+                    self._bump_tier(tier, -n)
         return True
 
     def _evict_to_budget(self) -> int:

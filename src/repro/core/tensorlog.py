@@ -28,6 +28,7 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 import zlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Sequence, Tuple
@@ -72,7 +73,7 @@ class TensorLog:
         self.max_file_bytes = max_file_bytes
         self.fsync_writes = fsync_writes
         self._lock = threading.RLock()  # guards appends + bookkeeping; reads are lock-free
-        self._files: Dict[int, dict] = {}  # id -> {size, live, path}
+        self._files: Dict[int, dict] = {}  # id -> {size, live, path, atime}
         self._active_id = -1
         self._active_f = None
         self.seq_reads = 0
@@ -89,7 +90,9 @@ class TensorLog:
                 fid = int(name[5:-4])
                 ids.append(fid)
                 size = os.path.getsize(self._path(fid))
-                self._files[fid] = {"size": size, "live": size, "path": self._path(fid)}
+                self._files[fid] = {"size": size, "live": size,
+                                    "path": self._path(fid),
+                                    "atime": time.monotonic()}
         self._active_id = max(ids) if ids else -1
 
     def _open_active(self) -> None:
@@ -97,7 +100,9 @@ class TensorLog:
             if self._active_f is not None:
                 self._active_f.close()
             self._active_id += 1
-            self._files[self._active_id] = {"size": 0, "live": 0, "path": self._path(self._active_id)}
+            self._files[self._active_id] = {"size": 0, "live": 0,
+                                            "path": self._path(self._active_id),
+                                            "atime": time.monotonic()}
             self._active_f = open(self._path(self._active_id), "ab")
 
     @property
@@ -118,6 +123,24 @@ class TensorLog:
     def file_ids(self) -> List[int]:
         with self._lock:
             return sorted(self._files)
+
+    # -- access recency (tier policy input) ----------------------------------
+    def touch(self, file_id: int) -> None:
+        """Refresh a file's last-access time.  Lock-free by design: called
+        from the read path, where a single dict-slot assignment is safe
+        under CPython and an occasionally-lost update only ages a file a
+        little early — the tier policy tolerates that."""
+        f = self._files.get(file_id)
+        if f is not None:
+            f["atime"] = time.monotonic()
+
+    def idle_s(self, file_id: int, now: float = None) -> float:
+        """Seconds since the file was last appended to or read from — the
+        access-recency signal ``core.tiering`` demotes on."""
+        f = self._files.get(file_id)
+        if f is None:
+            return 0.0
+        return (time.monotonic() if now is None else now) - f["atime"]
 
     # -- writes --------------------------------------------------------------
     def append(self, key: bytes, payload: bytes) -> LogPointer:
@@ -148,6 +171,7 @@ class TensorLog:
             os.fsync(self._active_f.fileno())
         finfo["size"] += len(buf)
         finfo["live"] += len(buf)
+        finfo["atime"] = time.monotonic()
         return ptrs
 
     def mark_dead(self, ptr: LogPointer) -> None:
@@ -161,6 +185,7 @@ class TensorLog:
         with open(self._path(ptr.file_id), "rb") as f:
             f.seek(ptr.offset)
             raw = f.read(ptr.length)
+        self.touch(ptr.file_id)
         return self._parse(raw, ptr)
 
     @staticmethod
@@ -203,6 +228,7 @@ class TensorLog:
                         raw = chunk[p.offset - start : p.offset - start + p.length]
                         out[idx] = self._parse(raw, p)
                     j = k
+            self.touch(fid)
         with self._lock:
             self.seq_reads += seq_reads
         return out

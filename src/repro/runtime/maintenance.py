@@ -30,6 +30,7 @@ class MaintenanceStats:
     compactions: int = 0
     evicted_files: int = 0
     merged_files: int = 0
+    demoted_blocks: int = 0  # blocks re-encoded down-tier (core.tiering)
     errors: int = 0
     busy_s: float = 0.0
 
@@ -95,6 +96,8 @@ class MaintenanceService:
                 agg.evicted_files += int(rep.get("evicted_files", 0) or 0)
                 merge = rep.get("merge") or {}
                 agg.merged_files += int(merge.get("files", 0) or 0)
+                tiering = rep.get("tiering") or {}
+                agg.demoted_blocks += int(tiering.get("demoted_blocks", 0) or 0)
                 if err is not None:
                     agg.errors += 1
             if err is not None:

@@ -20,11 +20,25 @@ from repro.core import (
 )
 from repro.core.baselines import fs_footprint
 from repro.core.controller import OP_EMPTY, OP_RANGE, OP_READ, OP_WRITE, AdaptiveController
+from repro.core.tiering import TieringPolicy
 
 # The store contract suite runs against both the monolithic LSM store and
 # the 4-way sharded store: the sharded backend inherits every behavioral
 # guarantee (put/probe/get, crash recovery, budget eviction).
 STORE_KINDS = ["lsm", "sharded"]
+
+# ... and across codec policies: the default store-wide int8+zlib codec,
+# lossless raw, and the adaptive tiering policy (raw hot puts, demotion
+# at the next maintenance cycle) — the contract must hold under each.
+CODEC_POLICIES = ["int8-zlib", "raw", "tiered"]
+
+
+def _policy_kwargs(policy):
+    if policy == "raw":
+        return {"codec": BatchCodec(CODEC_RAW, use_zlib=False)}
+    if policy == "tiered":
+        return {"tiering": TieringPolicy(warm_after_s=0.0, cold_after_s=0.0)}
+    return {}
 
 
 def _mk_store(kind, root, **kw):
@@ -74,9 +88,12 @@ def _mk_blocks(rng, n, block, kvdim=(2, 4)):
     return [rng.standard_normal((kvdim[0], block, kvdim[1]), dtype=np.float32) for _ in range(n)]
 
 
-@pytest.fixture(params=STORE_KINDS)
+@pytest.fixture(params=[(k, p) for k in STORE_KINDS for p in CODEC_POLICIES],
+                ids=lambda kp: f"{kp[0]}-{kp[1]}")
 def store(tmp_path, request):
-    s = _mk_store(request.param, str(tmp_path / "kvs"), block_size=4, buffer_bytes=4096)
+    kind, policy = request.param
+    s = _mk_store(kind, str(tmp_path / "kvs"), block_size=4, buffer_bytes=4096,
+                  **_policy_kwargs(policy))
     yield s
     s.close()
 

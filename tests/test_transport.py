@@ -355,24 +355,51 @@ def test_partial_stream_commits_only_the_arrived_prefix():
 
 
 # ======================================================== zero-copy serving
-def test_sendfile_stream_matches_buffered_stream(tmp_path):
-    """The sendfile fast path must be invisible to the client: bytes off
-    the zero-copy stream equal the buffered re-encode path's, and the
-    server accounts the raw extents it shipped."""
+@pytest.mark.parametrize("policy", ["raw", "int8-zlib", "tiered"])
+def test_sendfile_stream_matches_buffered_stream(tmp_path, policy):
+    """The sendfile fast path must be invisible to the client — under
+    every codec policy: bytes off the zero-copy stream equal the buffered
+    path's (which for compressed stores ships still-encoded payloads),
+    and the server accounts the raw extents it shipped.  For ``tiered``
+    the store is demoted to the cold tier first, so the wire carries
+    int8+zlib payloads both ways."""
+    from repro.core.codec import CODEC_INT8, CODEC_RAW, BatchCodec
+    from repro.core.tiering import TieringPolicy
+
     rng = np.random.default_rng(5)
     toks = _seq(rng, 4)
     blocks = _blocks(rng, 4)
+    kwargs = {
+        "raw": {"codec": BatchCodec(CODEC_RAW, use_zlib=False)},
+        "int8-zlib": {"codec": BatchCodec(CODEC_INT8, use_zlib=True)},
+        # small log roll: puts land in sealed files the recoder can demote
+        "tiered": {"tiering": TieringPolicy(warm_after_s=0.0, cold_after_s=0.0),
+                   "vlog_file_bytes": 256},
+    }[policy]
 
     def fill(root):
-        # raw codec: byte-exact round trips (int8 would be lossy) and
-        # contiguous vlog records for the extent path
-        from repro.core.codec import CODEC_RAW, BatchCodec
-
-        store = KVBlockStore(root, block_size=B, buffer_bytes=256,
-                             codec=BatchCodec(CODEC_RAW, use_zlib=False))
-        store.put_batch(toks, blocks)
-        store.flush()
+        store = KVBlockStore(root, block_size=B, buffer_bytes=256, **kwargs)
+        if policy == "tiered":
+            # one put per block: the log rolls between appends, sealing
+            # files the recoder can demote (a single batch stays active)
+            for i, blk in enumerate(blocks):
+                store.put_batch(toks[: (i + 1) * B], [blk], start_block=i)
+            store.flush()
+            for _ in range(8):
+                rep = store.maintenance()
+                if not (rep.get("tiering") or {}).get("demoted_blocks"):
+                    break
+            assert store.stats.tier_cold_blocks > 0
+        else:
+            store.put_batch(toks, blocks)
+            store.flush()
         return store
+
+    def check(got, want):
+        if policy == "raw":
+            assert np.array_equal(got, want) and got.dtype == want.dtype
+        else:  # int8 per-channel quantization error bound
+            np.testing.assert_allclose(got, want, atol=0.05, rtol=0.05)
 
     with CacheNodeServer(fill(str(tmp_path / "zc")), io_threads=1,
                          zero_copy=True) as zc_srv, CacheNodeServer(
@@ -384,10 +411,71 @@ def test_sendfile_stream_matches_buffered_stream(tmp_path):
         got_buf = list(buf.get_batch_stream(toks, 4 * B))
         assert len(got_zc) == len(got_buf) == 4
         for a, b, want in zip(got_zc, got_buf, blocks):
-            assert np.array_equal(a, want) and a.dtype == want.dtype
-            assert np.array_equal(b, want)
+            check(a, want)
+            check(b, want)
+            assert np.array_equal(a, b)  # paths decode identical payloads
         assert zc_srv.stats.sendfile_bytes > 0
         assert zc_srv.stats.raw_extents > 0
         assert buf_srv.stats.sendfile_bytes == 0
         zc.close()
         buf.close()
+
+
+def test_compressed_mid_stream_failover_stitches_within_quant_bound(tmp_path):
+    """R=2 with compressed payloads on the wire: the primary dies after
+    one LAYOUT_ENCODED chunk, the stream resumes from a real int8+zlib
+    replica, and the stitched blocks all decode within the quantization
+    bound — failover must work when what crosses the wire is compressed
+    bytes, not decoded tensors."""
+    from repro.core.codec import CODEC_INT8, BatchCodec
+
+    rng = np.random.default_rng(6)
+    n_blocks = 4
+    blocks = _blocks(rng, n_blocks)
+    codec = BatchCodec(CODEC_INT8, use_zlib=True)
+
+    def dying_handler(conn, rid, op, args):
+        if op == P.OP_STATS:
+            return _mux_frame(rid, P.KIND_RESPONSE,
+                              [P.encode_ok(op, {"name": "fake", "block_size": B,
+                                                "stats": {}})])
+        if op == P.OP_GET_STREAM:
+            # one compressed chunk (layout 3: still-encoded payloads)...
+            conn.sendall(_mux_frame(
+                rid, P.KIND_CHUNK,
+                P.encode_stream_chunk(0, 0, [codec.encode(blocks[0])])))
+            return None  # ... then die mid-stream
+        if op == P.OP_PING:
+            return None
+        return _mux_frame(rid, P.KIND_RESPONSE, [P.encode_error("unsupported")])
+
+    fake = _FakeNode(dying_handler)
+    replica_store = KVBlockStore(str(tmp_path / "replica"), block_size=B,
+                                 codec=codec)
+    healthy = CacheNodeServer(replica_store, io_threads=1).start()
+    try:
+        cluster = ClusterKVBlockStore(
+            [fake.address, healthy.address], replication=2, block_size=B,
+            retries=0, connect_timeout_s=2.0,
+        )
+        toks = None
+        for _ in range(200):
+            cand = _seq(rng, n_blocks)
+            if cluster.replicas_for(cand)[0] == 0:
+                toks = cand
+                break
+        assert toks is not None
+        replica_store.put_batch(toks, blocks)
+        replica_store.flush()
+
+        stream = cluster.get_batch_stream(toks, n_blocks * B)
+        got = list(stream)
+        assert len(got) == n_blocks
+        for want, have in zip(blocks, got):
+            np.testing.assert_allclose(have, want, atol=0.05, rtol=0.05)
+        assert stream.failovers == 1
+        assert 0 in cluster.down_nodes
+        cluster.close()
+    finally:
+        healthy.close()
+        fake.close()
