@@ -41,6 +41,16 @@ processes on localhost driven by one ``ClusterKVBlockStore`` client:
    every committed block from the survivor (zero lost blocks;
    ``examples/failover.py`` demonstrates the full kill/rejoin story).
 
+5. ELASTICITY: live membership change under load.  A 2-node cluster
+   holding a committed corpus scales out to 4 *mid-run* — reads keep
+   hitting through the two-ring transition, one maintenance cycle
+   drains the background block migration (time-to-rebalance recorded),
+   and the post-rebalance per-node served-block load must sit within a
+   1.3x max/mean imbalance bound.  A SIGKILL leg (R=2) then verifies
+   the repair path: hit rate holds through the outage and the next
+   maintenance cycle restores full replication (detection-to-repaired
+   lag recorded).
+
 ``run()`` writes the ``cluster`` artifact and returns the dict
 ``benchmarks/run.py`` serializes into ``BENCH_cluster.json``.
 """
@@ -105,24 +115,35 @@ class _LocalCluster:
                  node_io_threads: int = 2, client_io_threads: int = 16,
                  backend: str = "lsm", codec: str = "int8-zlib",
                  budget_bytes: int = 0, vlog_file_bytes: int = 0,
+                 vnodes: int = 64,
                  node_extra_args: Optional[List[str]] = None):
+        self._spawn_kw = dict(block_size=block_tokens, backend=backend,
+                              codec=codec, io_threads=node_io_threads,
+                              budget_bytes=budget_bytes,
+                              vlog_file_bytes=vlog_file_bytes,
+                              extra_args=node_extra_args)
         self.roots = [tempfile.mkdtemp(prefix=f"clbench_{n_nodes}n_{i}_")
                       for i in range(n_nodes)]
-        self.nodes = [
-            spawn_local_node(root, block_size=block_tokens, backend=backend,
-                             codec=codec, io_threads=node_io_threads,
-                             budget_bytes=budget_bytes,
-                             vlog_file_bytes=vlog_file_bytes,
-                             extra_args=node_extra_args)
-            for root in self.roots
-        ]
+        self.nodes = [spawn_local_node(root, **self._spawn_kw)
+                      for root in self.roots]
         self.store = ClusterKVBlockStore(
             [n.address for n in self.nodes],
             replication=replication,
             block_size=block_tokens,
             io_threads=client_io_threads,
+            vnodes=vnodes,
             node_ids=[f"node-{i}" for i in range(n_nodes)],  # stable placement
         )
+
+    def join_node(self) -> int:
+        """Spawn one more node process (same backend/codec/budget) and
+        join it to the live cluster; returns its index."""
+        idx = len(self.nodes)
+        root = tempfile.mkdtemp(prefix=f"clbench_join_{idx}_")
+        self.roots.append(root)
+        node = spawn_local_node(root, **self._spawn_kw)
+        self.nodes.append(node)
+        return self.store.add_node(node.address, node_id=f"node-{idx}")
 
     def cpu_s(self) -> Optional[float]:
         """CPU seconds consumed so far by the node processes + this one;
@@ -638,6 +659,181 @@ def failover_check(
     return out
 
 
+# ------------------------------------------------------------- elasticity
+def _served_blocks_per_node(cl: _LocalCluster) -> Dict[int, float]:
+    """Per-node served-block counters off the OP_METRICS scrape (buffered
+    gets plus the sendfile raw path — either way the node served)."""
+    out: Dict[int, float] = {}
+    for idx, rep in cl.store.scrape_cluster()["nodes"].items():
+        if rep.get("unreachable") or rep.get("retired"):
+            continue
+        g = rep["metrics"]["gauges"]
+        out[idx] = (g.get("repro_store_get_blocks", 0.0)
+                    + g.get("repro_store_raw_get_blocks", 0.0))
+    return out
+
+
+def elasticity_sweep(
+    start_nodes: int = 2,
+    end_nodes: int = 4,
+    n_seqs: int = 192,
+    blocks_per_seq: int = 6,
+    block_tokens: int = 16,
+    kv_bytes_per_token: int = 512,
+    replication: int = 2,
+    vnodes: int = 512,
+    imbalance_limit: Optional[float] = 1.3,
+    kill_leg: bool = True,
+    verbose: bool = True,
+) -> Dict:
+    """Live membership change under load, the tentpole's acceptance run.
+
+    Ingest a corpus on ``start_nodes`` nodes, then scale out to
+    ``end_nodes`` **mid-run**: reads must keep hitting through the
+    two-ring transition, ONE maintenance cycle must drain the rebalance
+    (time-to-rebalance is recorded from the migrator), and after it the
+    per-node served-block load over a full read pass must sit within
+    ``imbalance_limit`` (max/mean) — the joined nodes actually take
+    their share of the serving work.  The high ``vnodes`` default keeps
+    ring-arc variance below the sampling noise of the corpus.
+
+    With ``kill_leg``, the sweep then SIGKILLs one member (R=2): the hit
+    rate must hold through the outage (degraded reads, never misses),
+    the next maintenance cycle must repair back to full replication —
+    verified by per-node probes, every sequence fully resident on >=
+    ``replication`` live nodes — and the detection-to-repaired lag is
+    recorded.  The corpus and ring placement are deterministic (fixed
+    seed, stable node ids), so the recorded numbers are reproducible."""
+    seqs, blocks = make_corpus(n_seqs, blocks_per_seq, block_tokens,
+                               kv_bytes_per_token, seed=41)
+    n_tokens = blocks_per_seq * block_tokens
+    total_blocks = n_seqs * blocks_per_seq
+    get_items = [(s, n_tokens) for s in seqs]
+
+    def hit_rate() -> float:
+        return sum(cl.store.probe_many(seqs)) / (n_seqs * n_tokens)
+
+    cl = _LocalCluster(start_nodes, block_tokens, replication=replication,
+                       codec="raw", vnodes=vnodes)
+    try:
+        cl.store.put_many([(s, bs, 0) for s, bs in zip(seqs, blocks)])
+        cl.store.flush()
+        hit_before = hit_rate()
+
+        # ---- scale out mid-run -------------------------------------
+        t_scale = time.perf_counter()
+        for _ in range(start_nodes, end_nodes):
+            cl.join_node()
+        hit_mid = hit_rate()  # two-ring reads: no transition-window misses
+        rep = cl.store.maintenance()
+        wall_rebalance_s = time.perf_counter() - t_scale
+        mig = rep["migration"]
+        assert mig.get("done"), "rebalance did not drain in one maintenance cycle"
+        ms = cl.store.migrator.stats
+
+        # ---- post-rebalance load distribution ----------------------
+        snap0 = _served_blocks_per_node(cl)
+        t0 = time.perf_counter()
+        got = cl.store.get_many(get_items)
+        read_s = time.perf_counter() - t0
+        served = sum(len(g) for g in got)
+        snap1 = _served_blocks_per_node(cl)
+        load = {i: snap1[i] - snap0.get(i, 0.0) for i in snap1}
+        mean_load = sum(load.values()) / max(len(load), 1)
+        imbalance = max(load.values()) / max(mean_load, 1e-9)
+        if imbalance_limit is not None:
+            assert imbalance < imbalance_limit, (
+                f"post-rebalance served-block imbalance {imbalance:.2f} "
+                f">= {imbalance_limit} (per-node load {load})")
+        hit_after = hit_rate()
+
+        out: Dict = {
+            "start_nodes": start_nodes,
+            "end_nodes": end_nodes,
+            "replication": replication,
+            "vnodes": vnodes,
+            "total_blocks": total_blocks,
+            "hit_rate_before_scale": hit_before,
+            "hit_rate_mid_transition": hit_mid,
+            "hit_rate_after_rebalance": hit_after,
+            "rebalance_s": ms.rebalance_s,  # migrator task wall time
+            "scaleout_wall_s": wall_rebalance_s,  # join -> drained, incl. spawn
+            "migrated_blocks": ms.blocks_copied,
+            "migrated_bytes": ms.bytes_moved,
+            "served_blocks_per_s_after": served / read_s,
+            "served_fraction_after": served / total_blocks,
+            "per_node_served_blocks": load,
+            "load_imbalance_max_over_mean": imbalance,
+        }
+        if verbose:
+            print(f"  scale-out {start_nodes} -> {end_nodes} mid-run: "
+                  f"hit {hit_before:.1%} -> {hit_mid:.1%} (transition) -> "
+                  f"{hit_after:.1%}; rebalanced {ms.blocks_copied} blocks "
+                  f"({ms.bytes_moved >> 10}KiB) in {ms.rebalance_s:.2f}s; "
+                  f"load imbalance {imbalance:.2f}x")
+
+        # ---- SIGKILL + repair back to full replication -------------
+        if kill_leg:
+            victim = cl.store.replicas_for(seqs[0])[0]
+            cl.kill_node(victim)
+            hit_outage = hit_rate()  # marks the corpse down along the way
+            t0 = time.perf_counter()
+            rep2 = cl.store.maintenance()
+            repair_wall_s = time.perf_counter() - t0
+            assert rep2["migration"].get("kind") == "repair" and \
+                rep2["migration"].get("done"), "repair did not run to completion"
+            # every sequence back at full replication among the living
+            under = 0
+            for s in seqs:
+                full = sum(1 for i in cl.store.live_nodes
+                           if cl.store.nodes[i].probe(s) == n_tokens)
+                under += int(full < replication)
+            hit_repaired = hit_rate()
+            out["kill"] = {
+                "victim": victim,
+                "hit_rate_during_outage": hit_outage,
+                "hit_rate_after_repair": hit_repaired,
+                "repair_s": cl.store.migrator.stats.repair_s,
+                "repair_lag_s": cl.store.migrator.stats.repair_lag_s,
+                "repair_wall_s": repair_wall_s,
+                "repair_blocks": cl.store.migrator.stats.repair_blocks,
+                "seqs_under_replicated_after_repair": under,
+            }
+            assert under == 0, f"{under} sequences below R={replication} after repair"
+            if verbose:
+                print(f"  SIGKILL node {victim} (R={replication}): hit held at "
+                      f"{hit_outage:.1%} through the outage; repair copied "
+                      f"{out['kill']['repair_blocks']} blocks, detection->full-R "
+                      f"lag {out['kill']['repair_lag_s']:.2f}s; "
+                      f"under-replicated after: {under}")
+    finally:
+        cl.close()
+    return out
+
+
+def elasticity_smoke(verbose: bool = True) -> Dict:
+    """CI-sized elasticity check: 2 -> 3 nodes over a tiny corpus.
+    Asserts the rebalance drains within one maintenance cycle, the hit
+    rate holds through the transition and recovers to 100%, and (R=2)
+    a SIGKILL is repaired back to full replication.  The load-imbalance
+    gate is left to the full sweep — a tiny corpus under-samples it."""
+    ela = elasticity_sweep(
+        start_nodes=2, end_nodes=3,
+        n_seqs=24, blocks_per_seq=4, kv_bytes_per_token=256,
+        imbalance_limit=None, kill_leg=True,
+        verbose=verbose,
+    )
+    assert ela["hit_rate_mid_transition"] >= 0.999, "misses during transition"
+    assert ela["hit_rate_after_rebalance"] >= 0.999, "hit rate did not recover"
+    assert ela["migrated_blocks"] > 0, "rebalance moved nothing"
+    assert ela["kill"]["seqs_under_replicated_after_repair"] == 0
+    if verbose:
+        print("  elasticity smoke OK: rebalance "
+              f"{ela['migrated_blocks']} blocks in {ela['rebalance_s']:.2f}s, "
+              f"repair lag {ela['kill']['repair_lag_s']:.2f}s")
+    return ela
+
+
 # ------------------------------------------------------------ observability
 def observability_check(
     n_nodes: int = 4,
@@ -758,10 +954,17 @@ def run(quick: bool = False, verbose: bool = True) -> Dict:
     )
     fo = failover_check(verbose=verbose)
     if verbose:
+        print(" elasticity (mid-run scale-out + SIGKILL repair):")
+    ela = elasticity_sweep(
+        n_seqs=96 if quick else 192,
+        blocks_per_seq=4 if quick else 6,
+        verbose=verbose,
+    )
+    if verbose:
         print(" observability (mid-load OP_METRICS scrape of a live cluster):")
     obs = observability_check(verbose=verbose)
     out = {"capacity": cap, "serving": srv, "compression": comp,
-           "failover": fo, "observability": obs}
+           "failover": fo, "elasticity": ela, "observability": obs}
     common.save_artifact("cluster", out)
     return out
 
@@ -801,9 +1004,15 @@ def main(argv=None):
     ap.add_argument("--compression-smoke", action="store_true",
                     help="single-node tiered-vs-raw check with asserts "
                          "(CI-sized; skips the full sweeps)")
+    ap.add_argument("--elasticity-smoke", action="store_true",
+                    help="2->3 node live scale-out + SIGKILL repair with "
+                         "asserts (CI-sized; skips the full sweeps)")
     args = ap.parse_args(argv)
     if args.compression_smoke:
         compression_smoke()
+        return
+    if args.elasticity_smoke:
+        elasticity_smoke()
         return
     run(quick=args.quick)
 

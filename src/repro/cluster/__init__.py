@@ -13,13 +13,17 @@ is unrelated to ``repro.distributed``, which shards *model training*
                         connection, batched RPCs, streaming gets, retry)
     ClusterKVBlockStore StorageBackend over N nodes (HashRing routing,
                         replication, read-failover — including
-                        mid-stream — down/rejoin tracking)
+                        mid-stream — down/rejoin tracking, elastic
+                        add_node/remove_node membership)
+    BlockMigrator       background arc migration + replica repair on the
+                        maintenance cadence
     MuxLoop             shared client-side selector thread
     spawn_local_node    child-process node manager for demos/benchmarks
 """
 
 from .client import BlockStream, NodeUnavailable, RemoteKVBlockStore, RpcStats
 from .cluster_store import ClusterBlockStream, ClusterKVBlockStore, ClusterStats
+from .migration import BlockMigrator, MigrationStats
 from .mux import MuxConnection, MuxLoop
 from .node import NodeProcess, spawn_local_node
 from .protocol import (
@@ -29,7 +33,7 @@ from .protocol import (
     RemoteError,
     TruncatedFrame,
 )
-from .ring import HashRing, key_hash
+from .ring import HashRing, TransitionView, key_hash, raw_key_hash
 from .server import CacheNodeServer, ServerStats
 
 __all__ = [
@@ -45,7 +49,11 @@ __all__ = [
     "MuxLoop",
     "MuxConnection",
     "HashRing",
+    "TransitionView",
+    "BlockMigrator",
+    "MigrationStats",
     "key_hash",
+    "raw_key_hash",
     "NodeProcess",
     "spawn_local_node",
     "ProtocolError",

@@ -410,6 +410,49 @@ class RemoteKVBlockStore:
             out.extend(int(v) for v in self._rpc(P.OP_PUT_MANY, chunk))
         return out
 
+    # -------------------------------------------------- elasticity (migration)
+    # All three are idempotent (scan/pull are reads; push dedups on the
+    # receiving node), so the generic transport retry applies unchanged.
+
+    def scan_keys(
+        self,
+        cursor: Optional[bytes] = None,
+        limit: int = 1024,
+        ranges: Sequence[Tuple[int, int]] = (),
+    ) -> Tuple[List[bytes], Optional[bytes]]:
+        """One page of the node's live keys (``(keys, next_cursor)``),
+        optionally filtered to the given half-open wrapping ring arcs.
+        ``limit`` bounds keys *examined* node-side, so a filtered page may
+        come back short — or empty with a non-None cursor; loop until the
+        cursor is None."""
+        keys, next_cursor = self._rpc(P.OP_SCAN, cursor, int(limit), list(ranges))
+        return keys, next_cursor
+
+    def export_encoded(self, keys: Sequence[bytes]) -> List[Optional[Tuple[int, bytes]]]:
+        """Stored records for ``keys`` as ``(tier_flags, payload)`` pairs in
+        their stored encoding (``None`` where absent), aligned with ``keys``."""
+        if not keys:
+            return []
+        return self._rpc(P.OP_PULL, [bytes(k) for k in keys])
+
+    def import_encoded(self, records, skip_existing: bool = True) -> int:
+        """Push ``(key, flags, payload)`` records to the node verbatim;
+        returns blocks actually written (duplicates skipped).  Batches are
+        split by payload bytes so one migration page cannot trip the
+        frame cap."""
+        total = 0
+        chunk: list = []
+        chunk_bytes = 0
+        for key, flags, payload in records:
+            if chunk and chunk_bytes + len(payload) > self.put_chunk_bytes:
+                total += int(self._rpc(P.OP_PUSH, chunk, skip_existing))
+                chunk, chunk_bytes = [], 0
+            chunk.append((bytes(key), int(flags), bytes(payload)))
+            chunk_bytes += len(payload)
+        if chunk:
+            total += int(self._rpc(P.OP_PUSH, chunk, skip_existing))
+        return total
+
     def maintenance(self, compact_steps: int = 8) -> dict:
         return self._rpc(P.OP_MAINTENANCE, int(compact_steps))
 

@@ -26,6 +26,21 @@ Replication and failover:
   cluster semantics: nodes are cache, the engine recomputes true
   misses, so rebalance never blocks serving).
 
+Elastic membership (``add_node`` / ``remove_node``):
+
+* A membership change builds a **new** ring and holds both rings as a
+  ``TransitionView``: writes target the new owners immediately, reads
+  consult the new owners *and* the old owners, so every key is served
+  from wherever it currently lives while the move is in flight.
+* The attached ``BlockMigrator`` (``cluster.migration``) copies exactly
+  the moved ring arcs — and re-replicates arcs that lost a copy to a
+  death, when R >= 2 — on the maintenance cadence, shipping blocks in
+  their stored encoding.  When the copy drains, the old ring is dropped
+  (and a removed node retired from routing).
+* Node identity is the ring's vocabulary: routing maps ring node *ids*
+  through a stable id->client index, so client slots are append-only
+  and an index never changes meaning mid-flight.
+
 Fan-out reuses the grouped-parallel machinery of the sharded store: the
 multi-sequence ops group positions by replica set and run the groups
 concurrently on an ``IOExecutor``, each group riding the client's
@@ -50,8 +65,9 @@ from ..core.store import StoreStats
 from ..obs import MetricsRegistry, dataclass_gauges
 from ..runtime.executor import IOExecutor
 from .client import NodeUnavailable, RemoteKVBlockStore
+from .migration import BlockMigrator
 from .mux import MuxLoop
-from .ring import HashRing, key_hash
+from .ring import HashRing, TransitionView, affected_arcs, key_hash
 from .server import Address
 
 
@@ -114,15 +130,30 @@ class ClusterKVBlockStore:
         if len(sizes) != 1:
             raise ValueError(f"nodes disagree on block_size: {sorted(sizes)}")
         self.block_size = sizes.pop()
+        # retained so later add_node calls build clients the same way, and
+        # so replication re-expands when the cluster grows past it
+        self._client_kwargs = dict(client_kwargs)
+        self._requested_replication = max(1, replication)
         self.replication = max(1, min(replication, len(self.nodes)))
         if node_ids is None:
             node_ids = [str(c.address) for c in self.nodes]
         if len(node_ids) != len(self.nodes) or len(set(node_ids)) != len(node_ids):
             raise ValueError("node_ids must be unique, one per node")
         self.ring = HashRing(list(node_ids), vnodes=vnodes)
+        # ring node id -> index into self.nodes.  Client slots are
+        # append-only (removed nodes are *retired*, never popped), so an
+        # index keeps its meaning across membership changes.
+        self._node_index: Dict[str, int] = {nid: i for i, nid in enumerate(node_ids)}
         self.cluster_stats = ClusterStats()
         self._down: set = set()
+        self._retired: set = set()
+        self._pending_retire: set = set()
+        self._down_since: Dict[int, float] = {}  # mark-down monotonic stamps
+        self._last_repaired: frozenset = frozenset()
+        self._old_ring: Optional[HashRing] = None
+        self._transition: Optional[TransitionView] = None
         self._lock = threading.Lock()
+        self.migrator = BlockMigrator(self)
         if io_executor is not None:
             self._executor, self._owns_executor = io_executor, False
         elif io_threads > 0:
@@ -142,6 +173,11 @@ class ClusterKVBlockStore:
                                  "repro_cluster_live": float(len(self.live_nodes)),
                                  "repro_cluster_replication": float(self.replication),
                              }))
+        self.registry.register_collector(
+            dataclass_gauges("repro_migration", self.migrator.stats, lock=self._lock,
+                             extra=lambda: {
+                                 "repro_migration_active": float(self.migrator.active),
+                             }))
         self.registry.register_collector(self._rpc_gauges)
 
     def _rpc_gauges(self) -> Dict[str, float]:
@@ -155,21 +191,50 @@ class ClusterKVBlockStore:
         return out
 
     # -------------------------------------------------------------- routing
-    def _live_pref(self, tokens: Sequence[int], read: bool = False) -> List[int]:
-        """Ring preference order with down nodes filtered out.  ``read``
-        marks the call as a read for the degraded-read counter (a read
-        whose *ideal* replica set had a down member is served, but with
-        less redundancy than configured)."""
-        pref = self.ring.preference(key_hash(tokens, self.block_size))
+    def _pref_indices(self, khash: int, ring: Optional[HashRing] = None) -> List[int]:
+        """A ring's preference list mapped from ring-local indices to
+        cluster node indices via node id (ids are the stable vocabulary —
+        two rings of different membership agree on them)."""
+        ring = ring or self.ring
+        return [self._node_index[ring.node_ids[i]] for i in ring.preference(khash)]
+
+    def _live_pref_hash(self, khash: int, read: bool = False) -> List[int]:
+        pref = self._pref_indices(khash)
         with self._lock:
-            down = set(self._down)
-        live = [i for i in pref if i not in down]
+            dead = self._down | self._retired
+        live = [i for i in pref if i not in dead]
         if not live:
             raise NodeUnavailable("every replica for this key range is down")
-        if read and any(i in down for i in pref[: self.replication]):
+        if read and any(i in dead for i in pref[: self.replication]):
             with self._lock:
                 self.cluster_stats.degraded_reads += 1
         return live
+
+    def _live_pref(self, tokens: Sequence[int], read: bool = False) -> List[int]:
+        """Current-ring preference order with down/retired nodes filtered
+        out.  ``read`` marks the call as a read for the degraded-read
+        counter (a read whose *ideal* replica set had a down member is
+        served, but with less redundancy than configured)."""
+        return self._live_pref_hash(key_hash(tokens, self.block_size), read=read)
+
+    def _read_replicas(self, tokens: Sequence[int]) -> List[int]:
+        """The node indices a read should consult: the first R live nodes
+        of the current ring — plus, during a membership transition, the
+        first R live *old-ring* owners, so a key not yet migrated is
+        still served from where it lives.  Order is new owners first
+        (they are the steady-state answer and warm up as the migrator
+        fills them)."""
+        khash = key_hash(tokens, self.block_size)
+        out = self._live_pref_hash(khash, read=True)[: self.replication]
+        old = self._old_ring
+        if old is not None:
+            with self._lock:
+                dead = self._down | self._retired
+            old_pref = [i for i in self._pref_indices(khash, old) if i not in dead]
+            for i in old_pref[: self.replication]:
+                if i not in out:
+                    out.append(i)
+        return out
 
     def replicas_for(self, tokens: Sequence[int]) -> List[int]:
         """The node indices a put of ``tokens`` targets right now."""
@@ -179,6 +244,7 @@ class ClusterKVBlockStore:
         with self._lock:
             if idx not in self._down:
                 self._down.add(idx)
+                self._down_since.setdefault(idx, time.monotonic())
                 self.cluster_stats.marked_down += 1
 
     @property
@@ -189,22 +255,163 @@ class ClusterKVBlockStore:
     @property
     def live_nodes(self) -> List[int]:
         with self._lock:
-            return [i for i in range(len(self.nodes)) if i not in self._down]
+            return [
+                i for i in range(len(self.nodes))
+                if i not in self._down and i not in self._retired
+            ]
+
+    @property
+    def retired_nodes(self) -> List[int]:
+        with self._lock:
+            return sorted(self._retired)
 
     def refresh_nodes(self) -> List[int]:
         """Ping every down node; revive the ones that answer.  Returns the
-        revived indices.  Rejoin is a membership flip only — the ring is
-        static, so the node resumes its original arcs immediately."""
+        revived indices.  Rejoin is a membership flip only — rings never
+        rehash, so the node resumes its current arcs immediately."""
         revived = []
         with self._lock:
-            down = sorted(self._down)
+            down = sorted(self._down - self._retired)
         for i in down:
             if self.nodes[i].ping():
                 with self._lock:
                     self._down.discard(i)
+                    self._down_since.pop(i, None)
+                    # membership of the live set changed: future deaths
+                    # must re-trigger repair even for a previously
+                    # repaired down-set
+                    self._last_repaired = frozenset()
                     self.cluster_stats.revived += 1
                 revived.append(i)
         return revived
+
+    # --------------------------------------------------- elastic membership
+    @property
+    def in_transition(self) -> bool:
+        return self._transition is not None
+
+    def add_node(
+        self,
+        node: Union[RemoteKVBlockStore, Address],
+        node_id: Optional[str] = None,
+    ) -> int:
+        """Join a node to the cluster.  Returns its index.  Writes route
+        to the grown ring immediately; the migrator copies the moved arcs
+        on the maintenance cadence, and reads consult both rings until it
+        finishes."""
+        if isinstance(node, RemoteKVBlockStore):
+            client = node
+        else:
+            client = RemoteKVBlockStore(
+                node, block_size=self.block_size, **self._client_kwargs
+            )
+        if client.block_size != self.block_size:
+            raise ValueError(
+                f"node block_size {client.block_size} != cluster {self.block_size}"
+            )
+        nid = node_id if node_id is not None else str(client.address)
+        with self._lock:
+            if nid in self._node_index:
+                raise ValueError(f"duplicate node id {nid!r}")
+            self.nodes.append(client)
+            idx = len(self.nodes) - 1
+            self._node_index[nid] = idx
+        new_ring = HashRing(list(self.ring.node_ids) + [nid], vnodes=self.ring.vnodes)
+        self._begin_transition(new_ring)
+        return idx
+
+    def remove_node(self, node: Union[int, str]) -> int:
+        """Drain a node out of the cluster (by index or ring id).  The
+        node keeps serving reads as an old-ring owner — and acts as a
+        migration source — until its arcs have been copied off; then it
+        is retired from routing.  Returns its index."""
+        with self._lock:
+            if isinstance(node, str):
+                if node not in self._node_index:
+                    raise ValueError(f"unknown node id {node!r}")
+                nid, idx = node, self._node_index[node]
+            else:
+                idx = int(node)
+                ids = [k for k, v in self._node_index.items() if v == idx]
+                if not ids:
+                    raise ValueError(f"unknown node index {idx}")
+                nid = ids[0]
+            if nid not in self.ring.node_ids:
+                raise ValueError(f"node {nid!r} is not a ring member")
+            if len(self.ring) <= 1:
+                raise ValueError("cannot remove the last node")
+            self._pending_retire.add(idx)
+        new_ring = HashRing(
+            [n for n in self.ring.node_ids if n != nid], vnodes=self.ring.vnodes
+        )
+        self._begin_transition(new_ring)
+        return idx
+
+    def _begin_transition(self, new_ring: HashRing) -> None:
+        """Swap to ``new_ring`` and (re)start the rebalance.  A change
+        arriving mid-transition folds in: the *original* ring stays the
+        old/read view, so keys still un-migrated from it are never
+        orphaned, and the migrator restarts against the union of moved
+        arcs."""
+        with self._lock:
+            base = self._old_ring if self._old_ring is not None else self.ring
+            self.ring = new_ring
+            self.replication = max(
+                1, min(self._requested_replication, len(new_ring))
+            )
+            self._old_ring = base
+            self._transition = TransitionView(base, new_ring, self.replication)
+        self.migrator.begin_rebalance(self._transition)
+
+    def _complete_transition(self) -> None:
+        """Called by the migrator when the rebalance copy has drained:
+        drop the old ring and retire any removed nodes from routing."""
+        with self._lock:
+            self._old_ring = None
+            self._transition = None
+            self._retired |= self._pending_retire
+            self._pending_retire = set()
+            self._down -= self._retired
+            for i in self._retired:
+                self._down_since.pop(i, None)
+
+    def _note_repaired(self, downset: frozenset) -> None:
+        with self._lock:
+            self._last_repaired = frozenset(downset)
+
+    def migrate_step(self, max_pages: Optional[int] = None) -> dict:
+        """One unit of background data movement, driven from every
+        ``maintenance`` cycle.  Rebalance tasks (membership changes) are
+        started by ``_begin_transition``; this is also where a death is
+        noticed and a repair task launched: with R >= 2, arcs whose
+        replica set includes a down node are re-copied from the survivors
+        so the cluster returns to full replication."""
+        if (
+            not self.migrator.active
+            and self._transition is None
+            and self.replication >= 2
+        ):
+            with self._lock:
+                down_members = frozenset(
+                    i for i in self._down
+                    if i not in self._retired and i not in self._pending_retire
+                )
+                already = self._last_repaired
+            if down_members and down_members != already:
+                ids = [
+                    nid for nid, i in self._node_index.items() if i in down_members
+                ]
+                arcs = affected_arcs(self.ring, ids, self.replication)
+                with self._lock:
+                    stamps = [
+                        self._down_since[i] for i in down_members
+                        if i in self._down_since
+                    ]
+                down_t0 = min(stamps) if stamps else None
+                self.migrator.begin_repair(down_members, arcs, down_t0)
+        if self.migrator.active:
+            return self.migrator.step(max_pages)
+        return {"active": False}
 
     # ----------------------------------------------------- single-key ops
     def put_batch(
@@ -240,7 +447,7 @@ class ClusterKVBlockStore:
         the survivors' view)."""
         best = 0
         full = (len(tokens) // self.block_size) * self.block_size
-        for rank, idx in enumerate(self._live_pref(tokens, read=True)[: self.replication]):
+        for rank, idx in enumerate(self._read_replicas(tokens)):
             try:
                 got = self.nodes[idx].probe(tokens)
             except NodeUnavailable:
@@ -257,7 +464,7 @@ class ClusterKVBlockStore:
     def get_batch(self, tokens: Sequence[int], n_tokens: int) -> List[np.ndarray]:
         best: List[np.ndarray] = []
         want_blocks = n_tokens // self.block_size
-        for rank, idx in enumerate(self._live_pref(tokens, read=True)[: self.replication]):
+        for rank, idx in enumerate(self._read_replicas(tokens)):
             try:
                 got = self.nodes[idx].get_batch(tokens, n_tokens)
             except NodeUnavailable:
@@ -287,10 +494,15 @@ class ClusterKVBlockStore:
         self, seqs: Sequence[Sequence[int]], read: bool = False
     ) -> Dict[Tuple[int, ...], List[int]]:
         """Positions grouped by their current replica tuple; one group =
-        one batched RPC per replica node."""
+        one batched RPC per replica node.  Reads go through the
+        transition-aware replica set so in-flight migrations never hide
+        a key."""
         groups: Dict[Tuple[int, ...], List[int]] = {}
         for pos, tokens in enumerate(seqs):
-            key = tuple(self._live_pref(tokens, read=read)[: self.replication])
+            if read:
+                key = tuple(self._read_replicas(tokens))
+            else:
+                key = tuple(self._live_pref(tokens)[: self.replication])
             groups.setdefault(key, []).append(pos)
         return groups
 
@@ -400,11 +612,18 @@ class ClusterKVBlockStore:
     def maintenance(self, compact_steps: int = 8) -> dict:
         """Fan one maintenance cycle out to every live node (parallel when
         an executor is attached) and piggyback down-node rejoin checks —
-        the cadence the serving engine already drives."""
+        the cadence the serving engine already drives.
+
+        Ordering matters: migration runs *before* the per-node fan-out so
+        freshly copied blocks land at their destinations before those
+        nodes enforce their budgets (a block is never evicted in the same
+        cycle it arrives), and a source cannot evict-then-copy within one
+        cycle."""
         revived = self.refresh_nodes()
+        mig = self.migrate_step()
         live = self.live_nodes
         rep: dict = {"compactions": 0, "nodes": {}, "revived": revived,
-                     "down": self.down_nodes}
+                     "down": self.down_nodes, "migration": mig}
 
         def one(i: int) -> Optional[dict]:
             try:
@@ -491,7 +710,10 @@ class ClusterKVBlockStore:
             "replication": self.replication,
             "live": self.live_nodes,
             "down": self.down_nodes,
+            "retired": self.retired_nodes,
+            "in_transition": self.in_transition,
             "cluster": self.cluster_stats.as_dict(),
+            "migration": self.migrator.stats.as_dict(),
             "rpc": {i: c.rpc_stats.as_dict() for i, c in enumerate(self.nodes)},
         }
         if include_nodes:
@@ -525,7 +747,11 @@ class ClusterKVBlockStore:
         registry) rides along under ``"cluster"``."""
         nodes: Dict[int, dict] = {}
         down = set(self.down_nodes)
+        retired = set(self.retired_nodes)
         for i, client in enumerate(self.nodes):
+            if i in retired:
+                nodes[i] = {"retired": True}
+                continue
             if i in down:
                 nodes[i] = {"unreachable": True, "error": "marked down"}
                 continue
@@ -538,6 +764,7 @@ class ClusterKVBlockStore:
             "nodes": nodes,
             "live": self.live_nodes,
             "down": self.down_nodes,
+            "retired": self.retired_nodes,
             "cluster": self.registry.snapshot(),
         }
 
@@ -562,7 +789,7 @@ class ClusterBlockStream:
         want = self._n_tokens // store.block_size
         if want == 0:
             return
-        replicas = store._live_pref(self._tokens, read=True)[: store.replication]
+        replicas = store._read_replicas(self._tokens)
         for rank, idx in enumerate(replicas):
             if self.served >= want:
                 return

@@ -108,6 +108,13 @@ OP_FLUSH = 10
 OP_GET_STREAM = 11
 OP_GET_MANY_STREAM = 12
 OP_METRICS = 13
+# elasticity trio (cluster.migration): enumerate a node's keyspace in
+# pages, pull stored records, push them to a new owner — blocks travel in
+# their stored encoding (the unary cousin of LAYOUT_ENCODED), so cold
+# tiers migrate compressed
+OP_SCAN = 14
+OP_PULL = 15
+OP_PUSH = 16
 
 OP_NAMES = {
     OP_PING: "ping",
@@ -123,6 +130,9 @@ OP_NAMES = {
     OP_GET_STREAM: "get_stream",
     OP_GET_MANY_STREAM: "get_many_stream",
     OP_METRICS: "metrics",
+    OP_SCAN: "scan",
+    OP_PULL: "pull",
+    OP_PUSH: "push",
 }
 
 STREAM_OPS = (OP_GET_STREAM, OP_GET_MANY_STREAM)
@@ -418,6 +428,12 @@ def encode_request(op: int, *args) -> bytes:
     STATS () / METRICS () / MAINTENANCE (compact_steps,) / FLUSH ()
     GET_STREAM (tokens, n_tokens, chunk_blocks)
     GET_MANY_STREAM (items, chunk_blocks)
+    SCAN (cursor, limit, ranges)      cursor = bytes|None (opaque),
+                                      ranges = [(lo, hi), ...] half-open
+                                      wrapping ring arcs (u64) filtering
+                                      by key hash; empty = whole keyspace
+    PULL (keys,)                      keys = [bytes, ...]
+    PUSH (records, skip_existing)     records = [(key, flags, payload), ...]
     """
     parts: List = [struct.pack(">B", op)]
     if op in (OP_PING, OP_STATS, OP_METRICS, OP_FLUSH):
@@ -453,6 +469,29 @@ def encode_request(op: int, *args) -> bytes:
         parts.append(_U32.pack(len(args[0])))
         parts.extend(_enc_tokens(t) + _U64.pack(n) for t, n in args[0])
         parts.append(_U32.pack(args[1]))
+    elif op == OP_SCAN:
+        cursor, limit, ranges = args
+        if cursor is None:
+            parts.append(b"\x00")
+        else:
+            parts.append(b"\x01" + _U32.pack(len(cursor)))
+            parts.append(bytes(cursor))
+        parts.append(_U32.pack(limit) + _U32.pack(len(ranges)))
+        parts.extend(_U64.pack(lo) + _U64.pack(hi) for lo, hi in ranges)
+    elif op == OP_PULL:
+        parts.append(_U32.pack(len(args[0])))
+        for k in args[0]:
+            parts.append(_U32.pack(len(k)))
+            parts.append(bytes(k))
+    elif op == OP_PUSH:
+        records, skip_existing = args
+        parts.append(struct.pack(">B", 1 if skip_existing else 0))
+        parts.append(_U32.pack(len(records)))
+        for key, flags, payload in records:
+            parts.append(_U32.pack(len(key)))
+            parts.append(bytes(key))
+            parts.append(struct.pack(">B", flags & 0xFF) + _U32.pack(len(payload)))
+            parts.append(payload)
     else:
         raise ProtocolError(f"unknown opcode {op}")
     return b"".join(parts)
@@ -494,6 +533,21 @@ def decode_request(payload: bytes) -> Tuple[int, tuple]:
     elif op == OP_GET_MANY_STREAM:
         items = [(_dec_tokens(r), r.u64()) for _ in range(r.u32())]
         args = (items, r.u32())
+    elif op == OP_SCAN:
+        cursor = bytes(r.take(r.u32())) if r.u8() else None
+        limit = r.u32()
+        ranges = [(r.u64(), r.u64()) for _ in range(r.u32())]
+        args = (cursor, limit, ranges)
+    elif op == OP_PULL:
+        args = ([bytes(r.take(r.u32())) for _ in range(r.u32())],)
+    elif op == OP_PUSH:
+        skip_existing = bool(r.u8())
+        records = []
+        for _ in range(r.u32()):
+            key = bytes(r.take(r.u32()))
+            flags = r.u8()
+            records.append((key, flags, bytes(r.take(r.u32()))))
+        args = (records, skip_existing)
     else:
         raise ProtocolError(f"unknown opcode {op}")
     r.done()
@@ -519,6 +573,28 @@ def encode_ok(op: int, result) -> bytes:
             parts.extend(_enc_blocks(bs))
     elif op in (OP_STATS, OP_METRICS, OP_MAINTENANCE):
         parts.append(json.dumps(result).encode("utf-8"))
+    elif op == OP_SCAN:
+        keys, next_cursor = result
+        if next_cursor is None:
+            parts.append(b"\x00")
+        else:
+            parts.append(b"\x01" + _U32.pack(len(next_cursor)))
+            parts.append(bytes(next_cursor))
+        parts.append(_U32.pack(len(keys)))
+        for k in keys:
+            parts.append(_U32.pack(len(k)))
+            parts.append(bytes(k))
+    elif op == OP_PULL:
+        parts.append(_U32.pack(len(result)))
+        for rec in result:
+            if rec is None:
+                parts.append(b"\x00")
+            else:
+                flags, payload = rec
+                parts.append(b"\x01" + struct.pack(">B", flags & 0xFF) + _U32.pack(len(payload)))
+                parts.append(payload)
+    elif op == OP_PUSH:
+        parts.append(_U64.pack(int(result)))
     else:
         raise ProtocolError(f"unknown opcode {op}")
     return b"".join(parts)
@@ -554,6 +630,21 @@ def decode_response(op: int, payload: bytes):
             return json.loads(bytes(r.buf[r.pos :]).decode("utf-8"))
         except (UnicodeDecodeError, json.JSONDecodeError) as e:
             raise ProtocolError(f"bad JSON response body: {e}") from e
+    elif op == OP_SCAN:
+        next_cursor = bytes(r.take(r.u32())) if r.u8() else None
+        keys = [bytes(r.take(r.u32())) for _ in range(r.u32())]
+        result = (keys, next_cursor)
+    elif op == OP_PULL:
+        recs: List[Optional[Tuple[int, bytes]]] = []
+        for _ in range(r.u32()):
+            if r.u8():
+                flags = r.u8()
+                recs.append((flags, bytes(r.take(r.u32()))))
+            else:
+                recs.append(None)
+        result = recs
+    elif op == OP_PUSH:
+        result = r.u64()
     else:
         raise ProtocolError(f"unknown opcode {op}")
     r.done()

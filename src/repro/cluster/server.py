@@ -59,6 +59,7 @@ from ..core.store import StoreStats
 from ..obs import MetricsRegistry, dataclass_gauges
 from ..runtime.executor import IOExecutor
 from . import protocol as P
+from .ring import in_arc, raw_key_hash
 
 Address = Union[Tuple[str, int], str]  # (host, port) or unix socket path
 
@@ -563,6 +564,38 @@ class CacheNodeServer:
         if op == P.OP_FLUSH:
             b.flush()
             return None
+        # elasticity trio (cluster.migration) — optional backend methods,
+        # duck-typed like get_batch_encoded.  The ring-arc filter runs
+        # here, not in the backend: core stays placement-agnostic, and
+        # the hash is recomputed from the key bytes (raw_key_hash), so a
+        # node needs no token decode to place its own data.
+        if op == P.OP_SCAN:
+            cursor, limit, ranges = args
+            fn = getattr(b, "scan_keys", None)
+            if fn is None:
+                raise RuntimeError(
+                    f"backend {getattr(b, 'name', '?')} does not support key scans")
+            keys, next_cursor = fn(cursor, limit)
+            if ranges:
+                keys = [
+                    k for k in keys
+                    if any(in_arc(lo, hi, raw_key_hash(k, b.block_size))
+                           for lo, hi in ranges)
+                ]
+            return keys, next_cursor
+        if op == P.OP_PULL:
+            fn = getattr(b, "export_encoded", None)
+            if fn is None:
+                raise RuntimeError(
+                    f"backend {getattr(b, 'name', '?')} does not support block export")
+            return fn(args[0])
+        if op == P.OP_PUSH:
+            records, skip_existing = args
+            fn = getattr(b, "import_encoded", None)
+            if fn is None:
+                raise RuntimeError(
+                    f"backend {getattr(b, 'name', '?')} does not support block import")
+            return fn(records, skip_existing=skip_existing)
         raise P.ProtocolError(f"unknown opcode {op}")
 
     # ------------------------------------------------------- observability

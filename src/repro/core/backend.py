@@ -27,6 +27,17 @@ Optional fast-path methods (duck-typed; the cluster server probes with
                                   payloads (bytes), so compressed tiers
                                   ship compressed over the wire
 
+Optional elasticity methods (duck-typed the same way; ``cluster.migration``
+uses them to move blocks between nodes during membership changes):
+
+    scan_keys(cursor, limit)      one page of live index keys in a stable
+                                  total order -> (keys, next_cursor)
+    export_encoded(keys)          stored records as (tier_flags, payload)
+                                  pairs, still encoded (None if absent)
+    import_encoded(records,       accept foreign (key, flags, payload)
+                    skip_existing) records verbatim; idempotent when
+                                  skip_existing — returns #blocks written
+
 The LSM backends also accept a ``tiering=TieringPolicy`` constructor
 argument (``core.tiering``): puts then write the raw hot tier and the
 maintenance cycle demotes idle blocks to int8 / int8+zlib off-path.

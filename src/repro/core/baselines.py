@@ -330,6 +330,58 @@ class MemoryOnlyStore(BatchOpsMixin):
         self.stats.get_tokens += len(out) * B
         return out
 
+    # ----------------------------------------------- key export (elasticity)
+    # The cluster migration trio (see core.store).  Memory blocks are held
+    # decoded, so export wraps them in the raw codec (flags 0 = hot tier)
+    # and import decodes — the self-describing codec header keeps this
+    # interoperable with LSM nodes that ship compressed tiers.
+
+    @_locked
+    def scan_keys(self, cursor: Optional[bytes] = None, limit: int = 1024):
+        keys = sorted(k for k in self._lru if cursor is None or k > cursor)
+        page = keys[:limit]
+        next_cursor = page[-1] if len(keys) > limit else None
+        return page, next_cursor
+
+    @_locked
+    def export_encoded(self, keys: Sequence[bytes]):
+        codec = BatchCodec(CODEC_RAW, use_zlib=False)
+        out = []
+        n = 0
+        for k in keys:
+            blk = self._lru.get(bytes(k))
+            if blk is None:
+                out.append(None)
+            else:
+                out.append((0, codec.encode(blk)))
+                n += 1
+        self.stats.exported_blocks += n
+        return out
+
+    @_locked
+    def import_encoded(self, records, skip_existing: bool = True) -> int:
+        wrote = 0
+        for key, _flags, payload in records:
+            key = bytes(key)
+            if skip_existing and key in self._lru:
+                continue
+            arr = BatchCodec.decode(bytes(payload))
+            self._lru[key] = arr
+            self.bytes += arr.nbytes
+            self.stats.imported_blocks += 1
+            self.stats.imported_bytes += len(payload)
+            self.stats.payload_bytes_stored += arr.nbytes
+            wrote += 1
+        if wrote:
+            # imported arcs need not be prefix-closed: verify contiguity
+            self._may_have_holes = True
+        while self.bytes > self.budget_bytes and self._lru:
+            self._may_have_holes = True
+            _, old = self._lru.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.stats.evicted_blocks += 1
+        return wrote
+
     @_locked
     def maintenance(self, compact_steps: int = 0) -> dict:
         return {}

@@ -43,16 +43,26 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import struct
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..runtime.executor import IOExecutor
 from .backend import merge_stats
-from .keycodec import encode_tokens
+from .keycodec import TOKEN_WIDTH, encode_tokens
 from .store import KVBlockStore, StoreStats
 
 _META_FILE = "shards.json"
+
+
+def shard_of_key(key: bytes, block_size: int, n_shards: int) -> int:
+    """Stable shard index for an already-encoded index key: hash of the
+    first block's worth of bytes.  Keys are the big-endian token encoding,
+    so ``key[:TOKEN_WIDTH * block_size]`` is exactly the first block —
+    migration imports route without decoding tokens."""
+    head = bytes(key[: TOKEN_WIDTH * block_size])
+    return int.from_bytes(hashlib.blake2b(head, digest_size=8).digest(), "little") % n_shards
 
 
 def shard_of(tokens: Sequence[int], block_size: int, n_shards: int) -> int:
@@ -240,6 +250,51 @@ class ShardedKVBlockStore:
         return self._fan_out(
             [t for t, _, _ in items],
             lambda shard, pos: shard.put_batch(items[pos][0], items[pos][1], start_block=items[pos][2]),
+        )
+
+    # ----------------------------------------------- key export (elasticity)
+    # The cursor prefixes the inner shard cursor with a u16 shard index, so
+    # the page stream walks shard 0's keyspace, then shard 1's, ... — still
+    # a stable total order, which is all ``cluster.migration`` needs.
+
+    def scan_keys(self, cursor: Optional[bytes] = None, limit: int = 1024):
+        if cursor is None:
+            si, inner = 0, None
+        else:
+            (si,) = struct.unpack(">H", bytes(cursor[:2]))
+            inner = bytes(cursor[2:]) or None
+        while si < self.n_shards:
+            keys, nxt = self.shards[si].scan_keys(inner, limit)
+            if nxt is not None:
+                return keys, struct.pack(">H", si) + nxt
+            if si + 1 < self.n_shards:
+                if keys:
+                    return keys, struct.pack(">H", si + 1)
+                si, inner = si + 1, None
+                continue
+            return keys, None
+        return [], None
+
+    def export_encoded(self, keys: Sequence[bytes]):
+        out: list = [None] * len(keys)
+        groups: Dict[int, List[int]] = {}
+        for pos, key in enumerate(keys):
+            groups.setdefault(shard_of_key(key, self.block_size, self.n_shards), []).append(pos)
+        for si, positions in groups.items():
+            recs = self.shards[si].export_encoded([keys[p] for p in positions])
+            for p, rec in zip(positions, recs):
+                out[p] = rec
+        return out
+
+    def import_encoded(self, records, skip_existing: bool = True) -> int:
+        groups: Dict[int, list] = {}
+        for rec in records:
+            groups.setdefault(
+                shard_of_key(rec[0], self.block_size, self.n_shards), []
+            ).append(rec)
+        return sum(
+            self.shards[si].import_encoded(recs, skip_existing=skip_existing)
+            for si, recs in groups.items()
         )
 
     def maintenance(self, compact_steps: int = 8) -> dict:

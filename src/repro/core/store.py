@@ -86,6 +86,11 @@ class StoreStats:
     demote_bytes_before: int = 0  # payload bytes of demoted blocks, pre/post
     demote_bytes_after: int = 0
     demote_s: float = 0.0  # off-path wall time spent transcoding
+    # elasticity accounting: blocks shipped out of / into this store in
+    # stored encoding (cluster migration + replica repair traffic)
+    exported_blocks: int = 0
+    imported_blocks: int = 0
+    imported_bytes: int = 0  # stored payload bytes accepted by import
 
     @property
     def compression_ratio(self) -> float:
@@ -462,6 +467,111 @@ class KVBlockStore(BatchOpsMixin):
             self.stats.raw_get_blocks += len(run)
         return RawBatch(file=f, offset=ext.offset, length=ext.length,
                         record_lengths=list(ext.record_lengths))
+
+    # ----------------------------------------------- key export (elasticity)
+    # The enumeration/export/import trio is the storage-level substrate of
+    # cluster migration (``cluster.migration``): scan the live keyspace in
+    # pages, ship blocks *in their stored encoding* (cold tiers migrate
+    # compressed — no transcode on either side), and accept foreign records
+    # verbatim.  All three are optional backend methods (duck-typed by the
+    # cluster server, like ``get_batch_encoded``).
+
+    _SCAN_END = b"\xff" * 2048  # past any real key (keys are 4B/token)
+
+    def scan_keys(
+        self, cursor: Optional[bytes] = None, limit: int = 1024
+    ) -> "tuple[List[bytes], Optional[bytes]]":
+        """One page of live index keys in key order, starting strictly
+        after ``cursor`` (None = from the beginning).  Returns
+        ``(keys, next_cursor)``; ``next_cursor`` is None once the keyspace
+        is exhausted.  Key order sorts every prefix before its extensions,
+        so a prefix tree streams out in prefix-closed order — a migration
+        destination that imports pages in order never holds a child block
+        without its ancestors.  A page may be shorter than ``limit`` (or
+        the final ``next_cursor`` may point at an empty page); callers
+        loop until ``next_cursor`` is None."""
+        start = bytes(cursor) + b"\x00" if cursor else b""
+        out: List[bytes] = []
+        for k, _ in self.index.range(start, self._SCAN_END):
+            out.append(k)
+            if len(out) >= limit:
+                break
+        next_cursor = out[-1] if len(out) >= limit else None
+        return out, next_cursor
+
+    def export_encoded(self, keys: Sequence[bytes]):
+        """Stored records for ``keys`` as ``(tier_flags, payload)`` pairs
+        (still encoded — the wire ships what the disk stores), aligned
+        with ``keys``; ``None`` where a key is not (or no longer) indexed.
+        Same optimistic retry contract as ``get_batch``: losing a race
+        with eviction/merge re-resolves from the index."""
+        out: List[Optional[tuple]] = [None] * len(keys)
+        n = 0
+        for _attempt in range(3):
+            present = []
+            for i, key in enumerate(keys):
+                found, v = self.index.get(bytes(key))
+                if found:
+                    present.append((i, *self._unpack_entry(v)))
+            out = [None] * len(keys)
+            if not present:
+                break
+            try:
+                recs = self.log.read_batch([ptr for _, ptr, _ in present])
+            except FileNotFoundError:
+                continue  # lost the race with eviction/merge/demotion: retry
+            for (i, _, flags), (_, payload) in zip(present, recs):
+                out[i] = (flags, bytes(payload))
+            n = len(present)
+            break
+        with self._stats_lock:
+            self.stats.exported_blocks += n
+        return out
+
+    def import_encoded(self, records, skip_existing: bool = True) -> int:
+        """Accept foreign ``(key, tier_flags, payload)`` records verbatim:
+        the payload is appended to the tensor log unchanged and indexed
+        with its original tier flags, so a block that left its source as
+        int8+zlib lands here as int8+zlib.  Idempotent under
+        ``skip_existing`` (already-indexed keys are skipped and not
+        counted), which is what makes migration retries and multi-source
+        repair copies safe.  Returns the number of blocks written."""
+        fresh = []  # (key, payload)
+        flags_list: List[int] = []
+        for key, flags, payload in records:
+            key = bytes(key)
+            if skip_existing:
+                found, _ = self.index.get(key)
+                if found:
+                    continue
+            fresh.append((key, bytes(payload)))
+            flags_list.append(int(flags) & 0xFF)
+        if not fresh:
+            return 0
+        with self._lock:
+            # Imported arcs are subsets of the source keyspace, so this
+            # store can now hold blocks without their prefix ancestors —
+            # same probe-safety situation as file eviction.  Persist the
+            # marker *before* the records commit so probe verifies
+            # contiguity from the first imported block onward.
+            if not self._may_have_holes:
+                self._may_have_holes = True
+                open(self._holes_marker, "w").close()
+            # two-phase write, same ordering as put_batch
+            ptrs = self.log.append_batch(fresh)
+            self.index.put_batch(
+                (k, self._pack_value(p, fl))
+                for (k, _), p, fl in zip(fresh, ptrs, flags_list)
+            )
+        nbytes = sum(len(p) for _, p in fresh)
+        with self._stats_lock:
+            self.controller.record(OP_WRITE, len(fresh))
+            self.stats.imported_blocks += len(fresh)
+            self.stats.imported_bytes += nbytes
+            self.stats.payload_bytes_stored += nbytes
+            for fl in flags_list:
+                self._bump_tier(fl & TIER_MASK, 1)
+        return len(fresh)
 
     # ------------------------------------------------------------ lifecycle
     def maintenance(self, compact_steps: int = 8) -> dict:

@@ -40,6 +40,7 @@ def stats_bridges() -> List[Tuple[str, type]]:
     from ..cache.hierarchy import CacheStats
     from ..cluster.client import RpcStats
     from ..cluster.cluster_store import ClusterStats
+    from ..cluster.migration import MigrationStats
     from ..cluster.server import ServerStats
     from ..core.lsm import LSMStats
     from ..core.store import StoreStats
@@ -53,6 +54,7 @@ def stats_bridges() -> List[Tuple[str, type]]:
         ("repro_store", StoreStats),
         ("repro_lsm", LSMStats),
         ("repro_cluster", ClusterStats),
+        ("repro_migration", MigrationStats),
         ("repro_rpc", RpcStats),
         ("repro_engine", EngineStats),
         ("repro_cache", CacheStats),
@@ -78,6 +80,7 @@ def catalog() -> Dict[str, List[str]]:
         "repro_cluster_nodes",
         "repro_cluster_live",
         "repro_cluster_replication",
+        "repro_migration_active",
         # node backend probes (server-side collector)
         "repro_node_disk_bytes",
         "repro_node_file_count",

@@ -1,0 +1,181 @@
+"""Shared cluster-test fixtures: workload generators, in-process
+mem-backed clusters, child-process node management, and the fake-node
+frame-level failure injector.
+
+``test_cluster.py``, ``test_transport.py``, ``test_obs.py``, and
+``test_ring.py`` all build their topologies from here so the idioms
+(block shape, sequence shape, server/client wiring, spawn/kill/restart
+lifecycle) stay in one place.
+"""
+
+import socket
+import threading
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster import (
+    CacheNodeServer,
+    ClusterKVBlockStore,
+    NodeProcess,
+    RemoteKVBlockStore,
+    spawn_local_node,
+)
+from repro.cluster import protocol as P
+from repro.core.baselines import MemoryOnlyStore
+
+B = 4  # tokens per block used across the cluster suites
+
+
+# ------------------------------------------------------------- workloads
+def blocks(rng, n, dtype=np.float32):
+    return [rng.standard_normal((2, B, 4)).astype(dtype) for _ in range(n)]
+
+
+def seq(rng, nblocks):
+    return [int(x) for x in rng.integers(0, 50_000, nblocks * B)]
+
+
+# ------------------------------------------------- in-process mem cluster
+def mem_cluster(
+    n: int, replication: int, **kw
+) -> Tuple[List[CacheNodeServer], ClusterKVBlockStore]:
+    """N in-process memory-backed node servers (real sockets) plus a
+    connected cluster client with fail-fast retry settings.  Caller
+    closes both (``close_all``)."""
+    servers = [
+        CacheNodeServer(MemoryOnlyStore(1 << 26, block_size=B), io_threads=1).start()
+        for _ in range(n)
+    ]
+    cluster = ClusterKVBlockStore(
+        [s.address for s in servers], replication=replication, retries=0,
+        connect_timeout_s=2.0, **kw,
+    )
+    return servers, cluster
+
+
+def add_mem_node(servers: List[CacheNodeServer]) -> CacheNodeServer:
+    """Start one more in-process memory node (joining it to a cluster is
+    the caller's ``cluster.add_node`` call)."""
+    srv = CacheNodeServer(MemoryOnlyStore(1 << 26, block_size=B), io_threads=1).start()
+    servers.append(srv)
+    return srv
+
+
+def close_all(cluster: Optional[ClusterKVBlockStore], servers) -> None:
+    """Best-effort teardown: close the client first, then every server
+    (some may already be dead — that's the point of the fault tests)."""
+    if cluster is not None:
+        try:
+            cluster.close()
+        except Exception:  # noqa: BLE001
+            pass
+    for s in servers:
+        try:
+            s.close()
+        except Exception:  # noqa: BLE001
+            pass
+
+
+# ------------------------------------------------- child-process nodes
+def spawn_nodes(root, n: int, *, block_size: int = B, backend: str = "memory",
+                codec: str = "raw", io_threads: int = 1,
+                ready_timeout_s: float = 120.0, **kw) -> List[NodeProcess]:
+    """Spawn N real child-process nodes under ``root`` and wait for each
+    READY line.  The generous default deadline covers a loaded shared
+    container where the child interpreter can take >30s to import."""
+    return [
+        spawn_local_node(str(root / f"n{i}"), block_size=block_size,
+                         backend=backend, codec=codec, io_threads=io_threads,
+                         ready_timeout_s=ready_timeout_s, **kw)
+        for i in range(n)
+    ]
+
+
+def kill_node(node: NodeProcess) -> None:
+    """SIGKILL — the hard-death path (no flush, no goodbye frame)."""
+    node.kill()
+
+
+def restart_node(root, node: NodeProcess, *, block_size: int = B,
+                 backend: str = "memory", codec: str = "raw",
+                 ready_timeout_s: float = 120.0, **kw) -> NodeProcess:
+    """Restart a killed node on its old port (same address, cold or warm
+    store depending on backend) and wait for READY."""
+    return spawn_local_node(str(root), block_size=block_size, backend=backend,
+                            codec=codec, port=node.address[1],
+                            ready_timeout_s=ready_timeout_s, **kw)
+
+
+def wait_ready(node: NodeProcess, timeout_s: float = 30.0) -> bool:
+    """Poll the node with pings until it answers (spawn_local_node already
+    blocks on READY; this is for nodes restarted out-of-band)."""
+    import time
+    client = RemoteKVBlockStore(node.address, retries=0,
+                                connect_timeout_s=2.0, block_size=B)
+    try:
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            try:
+                if client.ping():
+                    return True
+            except Exception:  # noqa: BLE001
+                pass
+            time.sleep(0.1)
+        return False
+    finally:
+        client.close()
+
+
+# ------------------------------------------------ frame-level fault node
+def mux_frame(rid: int, kind: int, parts) -> bytes:
+    """A complete wire frame: u32 len | u32 rid | u8 kind | body."""
+    body = b"".join(bytes(p) for p in parts)
+    payload = P.pack_mux(rid, kind) + body
+    return len(payload).to_bytes(4, "big") + payload
+
+
+class FakeNode:
+    """A listening socket + a per-connection handler run on a thread.
+    ``handler(conn, rid, op, args)`` is called once per request frame and
+    returns raw bytes to send (or None to close the connection)."""
+
+    def __init__(self, handler):
+        self.handler = handler
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(8)
+        self.address = self.sock.getsockname()
+        self._stop = False
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        while not self._stop:
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            try:
+                while True:
+                    frame = P.recv_frame(conn)
+                    if frame is None:
+                        break
+                    rid, kind, body = P.split_mux(frame)
+                    op, args = P.decode_request(bytes(body))
+                    out = self.handler(conn, rid, op, args)
+                    if out is None:
+                        break
+                    conn.sendall(out)
+            except (OSError, P.ProtocolError):
+                pass
+            finally:
+                conn.close()
+
+    def close(self):
+        self._stop = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout=5)

@@ -14,6 +14,10 @@ import threading
 
 import numpy as np
 import pytest
+from cluster_harness import B, add_mem_node, close_all, mem_cluster
+from cluster_harness import blocks as _blocks
+from cluster_harness import seq as _seq
+from cluster_harness import spawn_nodes
 from hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.cluster import (
@@ -30,16 +34,6 @@ from repro.cluster import protocol as P
 from repro.core.backend import StorageBackend
 from repro.core.baselines import MemoryOnlyStore
 from repro.core.store import KVBlockStore
-
-B = 4
-
-
-def _blocks(rng, n, dtype=np.float32):
-    return [rng.standard_normal((2, B, 4)).astype(dtype) for _ in range(n)]
-
-
-def _seq(rng, nblocks):
-    return [int(x) for x in rng.integers(0, 50_000, nblocks * B)]
 
 
 # ============================================================ wire format
@@ -70,6 +64,26 @@ def test_request_roundtrip_all_ops():
     assert _roundtrip_request(P.OP_MAINTENANCE, 7) == (7,)
     assert _roundtrip_request(P.OP_STATS) == ()
     assert _roundtrip_request(P.OP_FLUSH) == ()
+    # elasticity ops: scan (cursor + arc ranges), pull, push
+    ranges = [(0, 2**63), (2**64 - 5, 17)]
+    assert _roundtrip_request(P.OP_SCAN, None, 256, ranges) == (None, 256, ranges)
+    assert _roundtrip_request(P.OP_SCAN, b"cur", 1, []) == (b"cur", 1, [])
+    keys = [b"k1", b"\x00" * 12, b"k3"]
+    assert _roundtrip_request(P.OP_PULL, keys) == (keys,)
+    records = [(b"k1", 0, b"payload"), (b"k2", 3, b"")]
+    got_recs, skip = _roundtrip_request(P.OP_PUSH, records, False)
+    assert got_recs == records and skip is False
+
+
+def test_elasticity_response_roundtrips():
+    keys = [b"a", b"bb", b"\xffccc"]
+    got = P.decode_response(P.OP_SCAN, P.encode_ok(P.OP_SCAN, (keys, b"next")))
+    assert got == (keys, b"next")
+    got = P.decode_response(P.OP_SCAN, P.encode_ok(P.OP_SCAN, (keys, None)))
+    assert got == (keys, None)
+    recs = [(0, b"raw-payload"), None, (3, b"zl")]
+    assert P.decode_response(P.OP_PULL, P.encode_ok(P.OP_PULL, recs)) == recs
+    assert P.decode_response(P.OP_PUSH, P.encode_ok(P.OP_PUSH, 42)) == 42
 
 
 def test_response_roundtrip_all_ops():
@@ -286,16 +300,7 @@ def test_ring_key_hash_prefix_stable():
 
 
 # ====================================================== cluster + failover
-def _mem_cluster(n, replication, **kw):
-    servers = [
-        CacheNodeServer(MemoryOnlyStore(1 << 26, block_size=B), io_threads=1).start()
-        for _ in range(n)
-    ]
-    cluster = ClusterKVBlockStore(
-        [s.address for s in servers], replication=replication, retries=0,
-        connect_timeout_s=2.0, **kw,
-    )
-    return servers, cluster
+_mem_cluster = mem_cluster  # shared fixture factory (tests/cluster_harness.py)
 
 
 def test_cluster_roundtrip_and_routing_locality():
@@ -416,6 +421,199 @@ def test_hierarchy_and_engine_run_unchanged_over_cluster(tmp_path):
         cluster.close()
         for s in servers:
             s.close()
+
+
+# =================================================== elastic membership
+def test_backend_scan_export_import_roundtrip(tmp_path):
+    """The elasticity trio on the LSM backend: stable-order paginated
+    scans, aligned stored-encoding export (None for absent keys), and
+    idempotent import into a twin store."""
+    rng = np.random.default_rng(20)
+    src = KVBlockStore(str(tmp_path / "src"), block_size=B, buffer_bytes=4096)
+    dst = KVBlockStore(str(tmp_path / "dst"), block_size=B, buffer_bytes=4096)
+    seqs = [_seq(rng, 3) for _ in range(7)]
+    for toks in seqs:
+        src.put_batch(toks, _blocks(rng, 3))
+    # paginate the whole keyspace with a tiny limit
+    keys, cursor, pages = [], None, 0
+    while True:
+        page, cursor = src.scan_keys(cursor, limit=4)
+        keys.extend(page)
+        pages += 1
+        if cursor is None:
+            break
+    assert len(keys) == len(set(keys)) == 21 and pages >= 6
+    recs = src.export_encoded(keys + [b"\x00" * 16])
+    assert recs[-1] is None and all(r is not None for r in recs[:-1])
+    wrote = dst.import_encoded(
+        [(k, fl, pl) for k, (fl, pl) in zip(keys, recs[:-1])]
+    )
+    assert wrote == 21
+    # idempotent: a second offer dedups to zero writes
+    assert dst.import_encoded(
+        [(k, fl, pl) for k, (fl, pl) in zip(keys, recs[:-1])]
+    ) == 0
+    for toks in seqs:
+        assert dst.probe(toks) == 3 * B
+        got, want = dst.get_batch(toks, 3 * B), src.get_batch(toks, 3 * B)
+        assert all(np.array_equal(a, b) for a, b in zip(got, want))
+    assert dst.stats.imported_blocks == 21 and src.stats.exported_blocks >= 21
+    src.close()
+    dst.close()
+
+
+def test_add_node_rebalances_within_one_maintenance_cycle():
+    """Scale-out 2 -> 4 mid-run: reads are served throughout the
+    transition, one maintenance cycle drains the rebalance, a second
+    cycle copies nothing (no duplicate fulfills), and every sequence is
+    fully resident on its new-ring replica set."""
+    servers, cluster = mem_cluster(2, replication=2,
+                                   node_ids=["node-0", "node-1"])
+    try:
+        rng = np.random.default_rng(21)
+        seqs = [_seq(rng, 3) for _ in range(32)]
+        for toks in seqs:
+            cluster.put_batch(toks, _blocks(rng, 3))
+        for i in (2, 3):
+            cluster.add_node(add_mem_node(servers).address, node_id=f"node-{i}")
+        assert cluster.in_transition
+        # mid-transition, before any migration: two-ring reads never miss
+        assert cluster.probe_many(seqs) == [3 * B] * len(seqs)
+        rep = cluster.maintenance(0)
+        assert rep["migration"]["done"] and not cluster.in_transition
+        ms = cluster.migrator.stats
+        assert ms.migrations_completed == 1 and ms.blocks_copied > 0
+        assert ms.rebalance_s > 0
+        # steady state: every seq full on each of its new-ring replicas
+        for toks in seqs:
+            for idx in cluster.replicas_for(toks):
+                assert cluster.nodes[idx].probe(toks) == 3 * B
+        # no duplicate fulfills: the next cycle has nothing to move
+        copied_before = ms.blocks_copied
+        assert cluster.maintenance(0)["migration"] == {"active": False}
+        assert ms.blocks_copied == copied_before
+        assert cluster.probe_many(seqs) == [3 * B] * len(seqs)
+    finally:
+        close_all(cluster, servers)
+
+
+def test_remove_node_drains_then_retires():
+    """remove_node keeps the leaver serving as an old-ring owner until
+    its arcs are copied off, then retires it from routing and scrapes it
+    as retired."""
+    servers, cluster = mem_cluster(3, replication=2,
+                                   node_ids=[f"node-{i}" for i in range(3)])
+    try:
+        rng = np.random.default_rng(22)
+        seqs = [_seq(rng, 2) for _ in range(24)]
+        for toks in seqs:
+            cluster.put_batch(toks, _blocks(rng, 2))
+        cluster.remove_node("node-1")
+        assert cluster.in_transition
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        rep = cluster.maintenance(0)
+        assert rep["migration"]["done"] and not cluster.in_transition
+        gone = 1
+        assert gone in cluster.retired_nodes
+        assert gone not in cluster.live_nodes
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        for toks in seqs:
+            assert gone not in cluster.replicas_for(toks)
+        assert cluster.scrape_cluster()["nodes"][gone] == {"retired": True}
+    finally:
+        close_all(cluster, servers)
+
+
+def test_death_triggers_repair_back_to_full_replication():
+    """R=2 and a node dies: reads keep serving (degraded, never failing)
+    and the next maintenance cycle re-replicates the lost arcs from the
+    survivors — every sequence ends fully resident on >= 2 live nodes,
+    with the repair visible in the scrape_cluster gauges."""
+    servers, cluster = mem_cluster(3, replication=2,
+                                   node_ids=[f"node-{i}" for i in range(3)])
+    try:
+        rng = np.random.default_rng(23)
+        seqs = [_seq(rng, 2) for _ in range(24)]
+        for toks in seqs:
+            cluster.put_batch(toks, _blocks(rng, 2))
+        victim = cluster.replicas_for(seqs[0])[0]
+        servers[victim].close()
+        # reads served throughout, by the surviving replica
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        assert victim in cluster.down_nodes
+        rep = cluster.maintenance(0)
+        assert rep["migration"]["kind"] == "repair" and rep["migration"]["done"]
+        ms = cluster.migrator.stats
+        assert ms.repairs_completed == 1 and ms.repair_blocks > 0
+        assert ms.repair_lag_s > 0
+        for toks in seqs:
+            full = sum(1 for i in cluster.live_nodes
+                       if cluster.nodes[i].probe(toks) == 2 * B)
+            assert full >= 2, "sequence not back at full replication"
+        # repaired down-set is remembered: no repeated repair next cycle
+        assert cluster.maintenance(0)["migration"] == {"active": False}
+        g = cluster.scrape_cluster()["cluster"]["gauges"]
+        assert g["repro_migration_repairs_completed"] == 1.0
+        assert g["repro_migration_repair_blocks"] > 0
+    finally:
+        close_all(cluster, servers)
+
+
+@pytest.mark.timeout(180)
+def test_sigkill_mid_migration_loses_no_committed_blocks(tmp_path):
+    """The fault-injection acceptance scenario on real child processes:
+    SIGKILL a migration *source* between incremental migrator steps.
+    Committed blocks must stay readable throughout (degraded, never
+    failing), the rebalance must still complete from the surviving
+    replicas, and repair must restore R copies — all verified through
+    scrape_cluster() counters."""
+    nodes = spawn_nodes(tmp_path, 4)
+    cluster = ClusterKVBlockStore(
+        [n.address for n in nodes[:3]], replication=2, retries=0,
+        connect_timeout_s=2.0, node_ids=[f"node-{i}" for i in range(3)],
+    )
+    try:
+        rng = np.random.default_rng(24)
+        seqs = [_seq(rng, 2) for _ in range(24)]
+        for toks in seqs:
+            cluster.put_batch(toks, _blocks(rng, 2))
+        cluster.add_node(nodes[3].address, node_id="node-3")
+        # migrate incrementally so there is a mid-migration window
+        step = cluster.migrate_step(max_pages=1)
+        assert step["active"] or step["done"]
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        # SIGKILL a source mid-migration (never the just-joined node)
+        victim = cluster.replicas_for(seqs[0])[0]
+        nodes[victim].kill()
+        # reads stay served across the kill — degraded, never failing
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        # drive maintenance until rebalance + repair have both completed
+        for _ in range(20):
+            cluster.maintenance(0)
+            ms = cluster.migrator.stats
+            if (not cluster.in_transition and not cluster.migrator.active
+                    and ms.repairs_completed >= 1):
+                break
+            assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        ms = cluster.migrator.stats
+        assert not cluster.in_transition
+        assert ms.migrations_completed >= 1 and ms.repairs_completed >= 1
+        # zero lost committed blocks, full replication among survivors
+        assert cluster.probe_many(seqs) == [2 * B] * len(seqs)
+        for toks in seqs:
+            full = sum(1 for i in cluster.live_nodes
+                       if cluster.nodes[i].probe(toks) == 2 * B)
+            assert full >= 2
+        g = cluster.scrape_cluster()["cluster"]["gauges"]
+        assert g["repro_migration_migrations_completed"] >= 1.0
+        assert g["repro_migration_repairs_completed"] >= 1.0
+        assert g["repro_migration_blocks_copied"] > 0
+        # import-side dedup: offers can exceed writes, never the reverse
+        assert g["repro_migration_blocks_pulled"] >= g["repro_migration_blocks_copied"]
+    finally:
+        cluster.close()
+        for n in nodes:
+            n.close()
 
 
 @pytest.mark.timeout(120)

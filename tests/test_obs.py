@@ -190,13 +190,13 @@ def test_trace_propagates_across_executor():
 # ------------------------------------------------- cross-process (real node)
 @pytest.fixture(scope="module")
 def local_node(tmp_path_factory):
-    from repro.cluster import spawn_local_node
+    from cluster_harness import spawn_nodes
 
-    # generous ready deadline: under a full-suite run on a loaded shared
-    # container the child interpreter can take >30s just to import jax
-    node = spawn_local_node(str(tmp_path_factory.mktemp("obsnode")),
-                            block_size=16, codec="raw", metrics_port=0,
-                            ready_timeout_s=120.0)
+    # generous ready deadline (cluster_harness default): under a
+    # full-suite run on a loaded shared container the child interpreter
+    # can take >30s just to import jax
+    (node,) = spawn_nodes(tmp_path_factory.mktemp("obsnode"), 1,
+                          block_size=16, backend="lsm", metrics_port=0)
     yield node
     node.close()
 
@@ -249,15 +249,15 @@ def test_node_http_exposition(local_node):
 def test_scrape_cluster_reports_dead_node_unreachable(tmp_path):
     """scrape_cluster must flag a killed node as unreachable and keep
     returning live nodes' metrics — never hang on the corpse."""
-    from repro.cluster import ClusterKVBlockStore, spawn_local_node
+    from cluster_harness import kill_node, spawn_nodes
 
-    nodes = [spawn_local_node(str(tmp_path / f"n{i}"), block_size=16,
-                              codec="raw", ready_timeout_s=120.0)
-             for i in range(2)]
+    from repro.cluster import ClusterKVBlockStore
+
+    nodes = spawn_nodes(tmp_path, 2, block_size=16, backend="lsm")
     store = ClusterKVBlockStore([n.address for n in nodes], block_size=16,
                                 retries=0, timeout_s=10.0)
     try:
-        nodes[1].kill()
+        kill_node(nodes[1])
         scrape = store.scrape_cluster()
         assert scrape["nodes"][1].get("unreachable")
         assert not scrape["nodes"][0].get("unreachable")

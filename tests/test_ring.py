@@ -1,0 +1,221 @@
+"""Property suite for the consistent-hash ring and the two-ring
+transition machinery (elastic membership).
+
+Follows the ``test_codec_policy.py`` pattern: every property has a
+deterministic grid twin that always runs (a fixed low-discrepancy sweep
+of the 64-bit keyspace plus the adversarial boundary points — the ring
+points themselves and their neighbours), and a hypothesis-driven variant
+that explores random memberships and hashes when hypothesis is
+installed.
+
+The properties are the ones the cluster layer's correctness rests on:
+
+* **minimal movement** — adding one node to an N-node ring remaps at
+  most ~c/N of the keyspace (consistent hashing's defining bound),
+* **prefix stability** — the preference list with node k filtered out
+  equals the preference list of the ring built without k (failover
+  lands where re-routed writes land, with no coordination),
+* **transition completeness** — ``TransitionView.read_ids`` always
+  contains every old r-owner and every new r-owner, so no key is
+  unreachable mid-migration; a key outside the moved arcs has its new
+  owners already among its old owners,
+* **arc algebra** — ``moved_arcs`` / ``affected_arcs`` agree exactly
+  with the per-key owner-set definitions they summarize, including at
+  ring-point boundaries where the bisect-side convention bites.
+"""
+
+from hypothesis_compat import given, settings, st
+
+from repro.cluster.ring import (
+    HashRing,
+    TransitionView,
+    affected_arcs,
+    in_arc,
+    moved_arcs,
+)
+
+U64 = 2**64
+# low-discrepancy sweep (Weyl sequence on the golden ratio) — a fixed,
+# deterministic sample of the keyspace used by every grid twin
+GRID = [(i * 0x9E3779B97F4A7C15) % U64 for i in range(512)]
+
+
+def _ids(n, prefix="node"):
+    return [f"{prefix}-{i}" for i in range(n)]
+
+
+def _boundary_hashes(*rings):
+    """The adversarial sample: every ring point, its predecessor, and its
+    successor — where the half-open ``(lo, hi]`` convention matters."""
+    out = set()
+    for ring in rings:
+        for p in ring._points:
+            out.update(((p - 1) % U64, p, (p + 1) % U64))
+    return sorted(out)
+
+
+def _owner_sets(old, new, r, h):
+    return set(old.preference_ids(h)[:r]), set(new.preference_ids(h)[:r])
+
+
+# ------------------------------------------------------------ in_arc algebra
+def test_in_arc_wrap_and_degenerate():
+    assert in_arc(5, 5, 0) and in_arc(5, 5, U64 - 1)  # lo == hi: full ring
+    assert in_arc(10, 20, 11) and in_arc(10, 20, 20)
+    assert not in_arc(10, 20, 10)  # half-open low side
+    assert not in_arc(10, 20, 21)
+    # wrapping arc (lo > hi)
+    assert in_arc(U64 - 5, 3, U64 - 1) and in_arc(U64 - 5, 3, 0)
+    assert in_arc(U64 - 5, 3, 3) and not in_arc(U64 - 5, 3, U64 - 5)
+    assert not in_arc(U64 - 5, 3, 1000)
+
+
+# -------------------------------------------------------- minimal movement
+def _movement_fraction(n, vnodes=64, samples=GRID):
+    old = HashRing(_ids(n), vnodes=vnodes)
+    new = HashRing(_ids(n + 1), vnodes=vnodes)
+    # compare primaries by id, not ring-local index
+    moved = sum(
+        1 for h in samples
+        if old.preference_ids(h)[0] != new.preference_ids(h)[0]
+    )
+    return moved / len(samples)
+
+
+def test_one_node_add_remaps_bounded_fraction_grid():
+    """Adding node N+1 moves ~1/(N+1) of keys; c=2.5 absorbs vnode
+    placement variance at 64 vnodes over the 512-sample grid."""
+    for n in (2, 3, 5, 8):
+        frac = _movement_fraction(n)
+        assert 0 < frac <= 2.5 / (n + 1), (n, frac)
+
+
+@given(n=st.integers(2, 10), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_one_node_add_remaps_bounded_fraction_property(n, seed):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    samples = [int(x) for x in rng.integers(0, U64, 512, dtype=np.uint64)]
+    frac = _movement_fraction(n, samples=samples)
+    assert 0 < frac <= 2.5 / (n + 1), (n, frac)
+
+
+# --------------------------------------------------------- prefix stability
+def _check_prefix_stability(ids, drop, hashes):
+    full = HashRing(ids, vnodes=64)
+    without = HashRing([i for i in ids if i != drop], vnodes=64)
+    for h in hashes:
+        filtered = [nid for nid in full.preference_ids(h) if nid != drop]
+        assert filtered == without.preference_ids(h), (drop, h)
+
+
+def test_preference_prefix_stable_under_down_filtering_grid():
+    """Filtering a dead node out of the full ring's preference list gives
+    exactly the without-ring's list — for every node, at grid hashes AND
+    at every ring-point boundary."""
+    ids = _ids(5)
+    full = HashRing(ids, vnodes=64)
+    hashes = GRID[:128] + _boundary_hashes(full)[: 4 * 64]
+    for drop in ids:
+        _check_prefix_stability(ids, drop, hashes)
+
+
+@given(
+    n=st.integers(2, 8),
+    drop=st.integers(0, 7),
+    hashes=st.lists(st.integers(0, U64 - 1), min_size=1, max_size=64),
+)
+@settings(max_examples=25, deadline=None)
+def test_preference_prefix_stable_property(n, drop, hashes):
+    ids = _ids(n)
+    _check_prefix_stability(ids, ids[drop % n], hashes)
+
+
+# --------------------------------------------------- transition completeness
+def _check_transition(old_ids, new_ids, r, hashes):
+    old = HashRing(old_ids, vnodes=64)
+    new = HashRing(new_ids, vnodes=64)
+    view = TransitionView(old, new, r)
+    for h in hashes:
+        old_set, new_set = _owner_sets(old, new, view.replicas, h)
+        reads = view.read_ids(h)
+        # never loses a key: wherever it lives (old owners) and wherever
+        # writes now land (new owners) are both consulted
+        assert old_set <= set(reads) and new_set <= set(reads), h
+        # new owners come first (the steady-state answer)
+        assert reads[: len(new_set)] == new.preference_ids(h)[: view.replicas]
+        # arc summary agrees with the per-key definition
+        assert view.key_moved(h) == (not new_set <= old_set), h
+
+
+def test_transition_view_never_loses_a_key_grid():
+    """Grow, shrink, and swap memberships: at grid hashes and at every
+    boundary point of either ring, reads cover old and new owners and
+    ``moved_arcs`` matches the owner-set definition exactly."""
+    cases = [
+        (_ids(2), _ids(4), 2),     # scale out 2 -> 4
+        (_ids(4), _ids(3), 2),     # drain one node
+        (_ids(3), _ids(3)[:2] + ["node-9"], 2),  # replace a member
+        (_ids(1), _ids(2), 1),     # degenerate: single node grows
+        (_ids(5), _ids(6), 3),     # r=3
+    ]
+    for old_ids, new_ids, r in cases:
+        old = HashRing(old_ids, vnodes=64)
+        new = HashRing(new_ids, vnodes=64)
+        hashes = GRID[:128] + _boundary_hashes(old, new)[: 6 * 64]
+        _check_transition(old_ids, new_ids, r, hashes)
+
+
+@given(
+    n_old=st.integers(1, 6),
+    n_new=st.integers(1, 6),
+    r=st.integers(1, 3),
+    hashes=st.lists(st.integers(0, U64 - 1), min_size=1, max_size=48),
+)
+@settings(max_examples=25, deadline=None)
+def test_transition_view_never_loses_a_key_property(n_old, n_new, r, hashes):
+    # overlap the memberships so there is something to keep AND move
+    old_ids = _ids(n_old)
+    new_ids = _ids(max(1, n_new - 1)) + ([f"joiner-{n_new}"] if n_new > 1 else [])
+    _check_transition(old_ids, new_ids, r, hashes)
+
+
+def test_unmoved_keys_need_no_copy_grid():
+    """A key outside the moved arcs already has all its new owners among
+    its old owners — migration can skip it entirely."""
+    old = HashRing(_ids(3), vnodes=64)
+    new = HashRing(_ids(4), vnodes=64)
+    view = TransitionView(old, new, 2)
+    unmoved = 0
+    for h in GRID:
+        if not view.key_moved(h):
+            old_set, new_set = _owner_sets(old, new, 2, h)
+            assert new_set <= old_set, h
+            unmoved += 1
+    assert unmoved > 0  # the sweep must actually exercise the branch
+
+
+# ------------------------------------------------------------- repair arcs
+def test_affected_arcs_match_owner_sets_grid():
+    """A hash lies in ``affected_arcs(ring, down, r)`` iff its r-owner
+    set intersects the down set — at grid hashes and ring boundaries."""
+    ring = HashRing(_ids(5), vnodes=64)
+    hashes = GRID[:128] + _boundary_hashes(ring)[: 5 * 64]
+    for down in (["node-0"], ["node-2", "node-4"]):
+        arcs = affected_arcs(ring, down, 2)
+        for h in hashes:
+            hit = any(in_arc(lo, hi, h) for lo, hi in arcs)
+            owners = set(ring.preference_ids(h)[:2])
+            assert hit == bool(owners & set(down)), (down, h)
+
+
+def test_moved_arcs_full_ring_degenerate():
+    """Replacing every member moves the whole keyspace: the summary
+    collapses to the full-ring arc and every key reads as moved."""
+    old = HashRing(["a"], vnodes=8)
+    new = HashRing(["b"], vnodes=8)
+    arcs = moved_arcs(old, new, 1)
+    assert len(arcs) == 1 and arcs[0][0] == arcs[0][1]
+    view = TransitionView(old, new, 1)
+    assert all(view.key_moved(h) for h in GRID[:64])

@@ -18,12 +18,15 @@ protocol to inject the failure; real ``CacheNodeServer``s cover the
 honest paths.
 """
 
-import socket
 import threading
 import time
 
 import numpy as np
 import pytest
+from cluster_harness import B, FakeNode as _FakeNode
+from cluster_harness import blocks as _blocks
+from cluster_harness import mux_frame as _mux_frame
+from cluster_harness import seq as _seq
 
 from repro.cache.hierarchy import CacheHierarchy
 from repro.cluster import (
@@ -35,69 +38,6 @@ from repro.cluster import (
 from repro.cluster import protocol as P
 from repro.core.baselines import MemoryOnlyStore
 from repro.core.store import KVBlockStore
-
-B = 4
-
-
-def _blocks(rng, n, dtype=np.float32):
-    return [rng.standard_normal((2, B, 4)).astype(dtype) for _ in range(n)]
-
-
-def _seq(rng, nblocks):
-    return [int(x) for x in rng.integers(0, 50_000, nblocks * B)]
-
-
-def _mux_frame(rid: int, kind: int, parts) -> bytes:
-    """A complete wire frame: u32 len | u32 rid | u8 kind | body."""
-    body = b"".join(bytes(p) for p in parts)
-    payload = P.pack_mux(rid, kind) + body
-    return len(payload).to_bytes(4, "big") + payload
-
-
-class _FakeNode:
-    """A listening socket + a per-connection handler run on a thread.
-    ``handler(conn, rid, op, args)`` is called once per request frame and
-    returns raw bytes to send (or None to close the connection)."""
-
-    def __init__(self, handler):
-        self.handler = handler
-        self.sock = socket.socket()
-        self.sock.bind(("127.0.0.1", 0))
-        self.sock.listen(8)
-        self.address = self.sock.getsockname()
-        self._stop = False
-        self._thread = threading.Thread(target=self._serve, daemon=True)
-        self._thread.start()
-
-    def _serve(self):
-        while not self._stop:
-            try:
-                conn, _ = self.sock.accept()
-            except OSError:
-                return
-            try:
-                while True:
-                    frame = P.recv_frame(conn)
-                    if frame is None:
-                        break
-                    rid, kind, body = P.split_mux(frame)
-                    op, args = P.decode_request(bytes(body))
-                    out = self.handler(conn, rid, op, args)
-                    if out is None:
-                        break
-                    conn.sendall(out)
-            except (OSError, P.ProtocolError):
-                pass
-            finally:
-                conn.close()
-
-    def close(self):
-        self._stop = True
-        try:
-            self.sock.close()
-        except OSError:
-            pass
-        self._thread.join(timeout=5)
 
 
 # ===================================================== out-of-order muxing
